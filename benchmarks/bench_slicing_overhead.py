@@ -1,0 +1,65 @@
+"""Fig. 10 + Sec. VI-A — slicing overhead O(B,S) (Eq. 4).
+
+Reports geometric/harmonic mean overhead per circuit for:
+  greedy baseline → sliceFinder (Alg. 1) → + tree tuning (Alg. 2).
+Paper headline: overhead 1.255 on the contraction path used for Sycamore
+(vs Cotengra 431 single-shot / Alibaba 4)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.slicing import find_slices
+from repro.core.tuning import tuning_slice_finder
+
+from .common import network_for, trees_for
+
+
+def _geo(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _har(xs):
+    return len(xs) / sum(1.0 / x for x in xs)
+
+
+def run(circuits=("syc-12", "syc-16", "syc-20", "zn-16"),
+        n_trees: int = 6) -> list[str]:
+    rows = []
+    for name in circuits:
+        tn, _ = network_for(name)
+        trees = trees_for(tn, n_trees)
+        ov = {"greedy": [], "lifetime": [], "tuned": []}
+        for i, tree in enumerate(trees):
+            target = max(tree.width() - 4, 8)
+            sg = find_slices(tree, target, method="greedy", repeats=4, seed=i)
+            ov["greedy"].append(tree.slicing_overhead(sg))
+            sl = find_slices(tree, target, method="lifetime")
+            ov["lifetime"].append(tree.slicing_overhead(sl))
+            res = tuning_slice_finder(tree, target, max_rounds=8)
+            ov["tuned"].append(res.tree.slicing_overhead(res.smask))
+        rows.append(
+            f"fig10_{name}_geomean,{_geo(ov['lifetime']):.3f},"
+            f"greedy={_geo(ov['greedy']):.3f};tuned={_geo(ov['tuned']):.3f}"
+        )
+        rows.append(
+            f"fig10_{name}_harmean,{_har(ov['lifetime']):.3f},"
+            f"greedy={_har(ov['greedy']):.3f};tuned={_har(ov['tuned']):.3f}"
+        )
+    # best single overhead on the biggest circuit (paper: 1.255)
+    tn, _ = network_for("syc-20")
+    best = float("inf")
+    for t in trees_for(tn, 4):
+        res = tuning_slice_finder(t, max(t.width() - 4, 8), max_rounds=10)
+        best = min(best, res.tree.slicing_overhead(res.smask))
+    rows.append(f"fig10_best_overhead_syc20,{best:.3f},paper=1.255")
+    return rows
+
+
+def main() -> None:
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: the circuit pool mirroring the paper's
+syc-m / zn-m instances (scaled to CPU-planner size — the planner algebra
+is identical at any scale; its inputs are graphs, not arrays)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.contraction_tree import ContractionTree
+from repro.core.executor import simplify_network
+from repro.core.pathfinder import greedy_ssa_path
+from repro.quantum.circuits import (
+    circuit_to_network,
+    sycamore_like,
+    zuchongzhi_like,
+)
+
+CIRCUITS = {
+    "syc-8": lambda: sycamore_like(4, 5, 8, seed=0),
+    "syc-12": lambda: sycamore_like(4, 5, 12, seed=0),
+    "syc-16": lambda: sycamore_like(4, 5, 16, seed=0),
+    "syc-20": lambda: sycamore_like(4, 5, 20, seed=0),
+    "zn-12": lambda: zuchongzhi_like(4, 6, 12, seed=0),
+    "zn-16": lambda: zuchongzhi_like(4, 6, 16, seed=0),
+}
+
+
+def network_for(name: str):
+    circ = CIRCUITS[name]()
+    tn, arrays = circuit_to_network(circ, bitstring="0" * circ.num_qubits)
+    return simplify_network(tn, arrays)
+
+
+def trees_for(tn, n_trees: int, seed0: int = 0):
+    """A pool of distinct contraction trees (mixed temperatures), like the
+    paper's '100 different contraction trees'."""
+    temps = [0.0, 0.2, 0.5, 1.0]
+    out = []
+    for i in range(n_trees):
+        path = greedy_ssa_path(tn, seed=seed0 + i, temperature=temps[i % 4])
+        out.append(ContractionTree.from_ssa_path(tn, path))
+    return out
+
+
+def timer(fn, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best

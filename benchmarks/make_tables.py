@@ -1,0 +1,118 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+from .bench_roofline import enrich
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "llama3-405b", "llama3.2-3b", "qwen3-4b", "deepseek-7b", "zamba2-7b",
+    "seamless-m4t-medium", "deepseek-moe-16b", "llama4-scout-17b-a16e",
+    "qwen2-vl-72b", "mamba2-130m",
+]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}µs"
+
+
+def load(dryrun_dir="experiments/dryrun"):
+    """One record per cell: the run whose sharding recipe matches the
+    arch's production recipe (experiment variants like __rfsdp_only are
+    §Perf baselines, not table rows)."""
+    recs = {}
+    for path in glob.glob(os.path.join(dryrun_dir, "*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        arch = r.get("arch")
+        try:
+            want = get_config(arch).sharding_recipe
+        except KeyError:
+            continue
+        got = r.get("recipe")
+        if got is not None and got != want:
+            continue
+        key = (arch, r.get("shape"), "multi" in os.path.basename(path))
+        recs[key] = r
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    # ---------------- dry-run table (both meshes) ----------------
+    print("### Dry-run matrix (lower + compile status, per-device memory)\n")
+    print("| arch | shape | 16x16 | 2x16x16 | args/dev | temps/dev | "
+          "collectives (single-pod) |")
+    print("|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r1 = recs.get((arch, shape, False))
+            r2 = recs.get((arch, shape, True))
+            if r1 is None and r2 is None:
+                continue
+            def status(r):
+                if r is None:
+                    return "–"
+                if "error" in r:
+                    return "FAIL"
+                if "skipped" in r:
+                    return "skip"
+                return "OK"
+            mem = arg = coll = "-"
+            if r1 and "roofline" in r1:
+                m = r1["memory"]
+                arg = fmt_bytes(m.get("argument_bytes"))
+                mem = fmt_bytes(m.get("temp_bytes"))
+                cb = r1["roofline"]["collective_bytes_per_device"]
+                coll = ", ".join(
+                    f"{k}:{fmt_bytes(v)}" for k, v in sorted(cb.items())
+                ) or "none"
+            print(f"| {arch} | {shape} | {status(r1)} | {status(r2)} "
+                  f"| {arg} | {mem} | {coll} |")
+    # ---------------- roofline table (single-pod) ----------------
+    print("\n### Roofline (single-pod 16x16, per-device terms)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "bound | MODEL/HLO | frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, False))
+            if r is None or "roofline" not in r:
+                continue
+            e = enrich(r)
+            print(
+                f"| {arch} | {shape} | {fmt_s(e['compute_s'])} "
+                f"| {fmt_s(e['memory_s'])} | {fmt_s(e['collective_s'])} "
+                f"| {e['dominant']} | {fmt_s(e['bound_s'])} "
+                f"| {e['useful_ratio']:.2f} | {e['roofline_fraction']:.2f} |"
+            )
+
+
+if __name__ == "__main__":
+    main()

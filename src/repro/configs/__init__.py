@@ -1,0 +1,61 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS``."""
+
+from __future__ import annotations
+
+from .base import SHAPES, ArchConfig, ShapeCell, cell_applicable, smoke_shrink
+from . import (
+    deepseek_7b,
+    deepseek_moe_16b,
+    llama3_2_3b,
+    llama3_405b,
+    llama4_scout_17b_a16e,
+    mamba2_130m,
+    qwen2_vl_72b,
+    qwen3_4b,
+    seamless_m4t_medium,
+    zamba2_7b,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        llama3_405b,
+        llama3_2_3b,
+        qwen3_4b,
+        deepseek_7b,
+        zamba2_7b,
+        seamless_m4t_medium,
+        deepseek_moe_16b,
+        llama4_scout_17b_a16e,
+        qwen2_vl_72b,
+        mamba2_130m,
+    )
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """Every (arch, shape) cell with its applicability + skip reason."""
+    out = []
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, why = cell_applicable(cfg, shape)
+            out.append((aname, sname, ok, why))
+    return out
+
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "ArchConfig",
+    "ShapeCell",
+    "get_config",
+    "all_cells",
+    "cell_applicable",
+    "smoke_shrink",
+]

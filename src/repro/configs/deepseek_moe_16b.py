@@ -1,0 +1,21 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained
+experts, first layer dense [arXiv:2401.06066; hf]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=10944,             # dense-layer ffn (layer 0)
+    vocab_size=102400,
+    head_dim=128,
+    num_experts=64,
+    experts_per_token=6,
+    num_shared_experts=2,
+    moe_d_ff=1408,
+    first_k_dense=1,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,20 @@
+"""seamless-m4t-medium [audio] — enc-dec backbone, multimodal
+[arXiv:2308.11596; hf].  Audio frontend is a STUB per the assignment:
+input_specs() provides precomputed frame embeddings (batch, frames,
+d_model); the text decoder is standard causal with cross-attention."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    num_layers=12,          # decoder layers
+    encoder_layers=12,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    embed_inputs=True,      # encoder consumes frame embeddings
+    rope_theta=10000.0,
+)

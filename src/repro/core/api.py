@@ -1,0 +1,115 @@
+"""End-to-end pipeline: circuit → network → path → slicing → tuning →
+merging → sliced JAX contraction.  This is the public API the examples and
+benchmarks drive."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from .contraction_tree import ContractionTree
+from .executor import ContractionPlan, simplify_network
+from .lifetime import detect_stem
+from .merging import merge_branches, modeled_tree_time, orient_gemms
+from .pathfinder import random_greedy_tree
+from .slicing import find_slices
+from .tensor_network import popcount
+from .tuning import tuning_slice_finder
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """Planner metrics mirroring the paper's reported quantities."""
+
+    num_tensors: int
+    width_before: int
+    width_after: int
+    log2_cost: float
+    log2_sliced_cost: float
+    num_sliced: int
+    slicing_overhead: float  # Eq. 4
+    modeled_time_s: float  # Sec. V model, one chip
+    plan_wall_s: float
+
+    def row(self) -> str:
+        return (
+            f"tensors={self.num_tensors} W={self.width_before}->"
+            f"{self.width_after} log2C={self.log2_cost:.2f} "
+            f"slices={self.num_sliced} overhead={self.slicing_overhead:.3f} "
+            f"t_model={self.modeled_time_s:.3e}s plan={self.plan_wall_s:.2f}s"
+        )
+
+
+@dataclasses.dataclass
+class SimulationResult:
+    value: np.ndarray | complex
+    report: PlanReport
+    tree: ContractionTree
+    smask: int
+
+
+def plan_contraction(
+    tn,
+    target_dim: int,
+    method: str = "lifetime",
+    tune: bool = True,
+    merge: bool = True,
+    repeats: int = 8,
+    seed: int = 0,
+):
+    """Full planning pipeline on a tensor network."""
+    t0 = time.perf_counter()
+    tree = random_greedy_tree(tn, repeats=repeats, seed=seed)
+    width0 = tree.width()
+    if tune and method == "lifetime":
+        res = tuning_slice_finder(tree, target_dim)
+        tree, smask = res.tree, res.smask
+    else:
+        smask = find_slices(tree, target_dim, method=method, seed=seed)
+    if merge:
+        tree = merge_branches(tree, smask).tree
+        smask = find_slices(tree, target_dim, method=method, seed=seed)
+    tree = orient_gemms(tree)
+    wall = time.perf_counter() - t0
+    report = PlanReport(
+        num_tensors=tn.num_tensors,
+        width_before=width0,
+        width_after=tree.sliced_width(smask),
+        log2_cost=tree.log2_total_cost(),
+        log2_sliced_cost=math.log2(tree.sliced_cost(smask)),
+        num_sliced=popcount(smask),
+        slicing_overhead=tree.slicing_overhead(smask),
+        modeled_time_s=modeled_tree_time(tree, smask),
+        plan_wall_s=wall,
+    )
+    return tree, smask, report
+
+
+def simulate_amplitude(
+    circuit,
+    bitstring: str,
+    target_dim: int = 20,
+    method: str = "lifetime",
+    tune: bool = True,
+    merge: bool = True,
+    seed: int = 0,
+    slice_batch: int = 4,
+) -> SimulationResult:
+    """Amplitude <bitstring|C|0…0> via the full planner + executor stack."""
+    from ..quantum.circuits import circuit_to_network  # avoid import cycle
+
+    tn, arrays = circuit_to_network(circuit, bitstring=bitstring)
+    tn, arrays = simplify_network(tn, arrays)
+    tree, smask, report = plan_contraction(
+        tn, target_dim, method=method, tune=tune, merge=merge, seed=seed
+    )
+    plan = ContractionPlan(tree, smask)
+    n_slices = 1 << plan.num_sliced
+    sb = 1
+    while sb * 2 <= min(slice_batch, n_slices) and n_slices % (sb * 2) == 0:
+        sb *= 2
+    value = plan.contract_all(arrays, slice_batch=sb)
+    return SimulationResult(np.asarray(value), report, tree, smask)

@@ -1,0 +1,254 @@
+"""Rooted binary contraction trees with the paper's complexity algebra.
+
+A contraction tree B = (N_B, E_B): every tree edge carries the index set of
+an (input or intermediate) tensor, every internal node is a pairwise
+contraction.  We keep the paper's quantities:
+
+  width  W(B)   = max_e |s_e|                       (Eq. 2, log2 memory)
+  cost   C(B)   = sum_node 2^{|s_node|}             (Eq. 3)
+  sliced C(B,S) = sum_node 2^{|s_node|+|S|-|S∩s_node|}   (Eq. 6)
+
+Index sets are int bitmasks (see tensor_network.py).  The tree is mutable:
+branch exchange and branch merging (Secs. IV-C / V-B) are local surgeries
+with incremental mask updates.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from .tensor_network import TensorNetwork, bits, popcount
+
+
+class ContractionTree:
+    """Binary contraction tree over a :class:`TensorNetwork`.
+
+    Leaves are node ids ``0..n-1`` (matching ``tn.inputs``); internal nodes
+    get fresh ids.  ``emask[v]`` is the index bitmask of the tensor produced
+    by the subtree rooted at ``v`` (for leaves: the input tensor's mask).
+    """
+
+    def __init__(self, tn: TensorNetwork):
+        self.tn = tn
+        n = tn.num_tensors
+        self.children: dict[int, tuple[int, int]] = {}
+        self.parent: dict[int, int] = {}
+        self.emask: dict[int, int] = {i: tn.masks[i] for i in range(n)}
+        self.root: int | None = None
+        self._next_id = n
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_ssa_path(
+        cls, tn: TensorNetwork, ssa_path: Sequence[tuple[int, int]]
+    ) -> "ContractionTree":
+        """Build from an SSA path: leaves are 0..n-1; contraction ``k``
+        combines two existing ssa ids and produces ssa id ``n + k``."""
+        t = cls(tn)
+        if tn.num_tensors == 1:
+            t.root = 0
+            return t
+        if len(ssa_path) != tn.num_tensors - 1:
+            raise ValueError(
+                f"path has {len(ssa_path)} contractions for "
+                f"{tn.num_tensors} tensors"
+            )
+        for a, b in ssa_path:
+            t._contract(a, b)
+        t.root = t._next_id - 1
+        return t
+
+    def _result_mask(self, ma: int, mb: int) -> int:
+        open_m = self.tn.open_mask
+        return (ma ^ mb) | (ma & mb & open_m)
+
+    def _contract(self, a: int, b: int) -> int:
+        nid = self._next_id
+        self._next_id += 1
+        self.children[nid] = (a, b)
+        self.parent[a] = nid
+        self.parent[b] = nid
+        self.emask[nid] = self._result_mask(self.emask[a], self.emask[b])
+        return nid
+
+    def is_leaf(self, v: int) -> bool:
+        return v not in self.children
+
+    # ------------------------------------------------------------------
+    # complexity algebra
+    # ------------------------------------------------------------------
+    def node_mask(self, v: int) -> int:
+        """s_node = union of the two contracted tensors' indices."""
+        l, r = self.children[v]
+        return self.emask[l] | self.emask[r]
+
+    def internal_nodes(self) -> list[int]:
+        return list(self.children.keys())
+
+    def width(self) -> int:
+        return max(popcount(m) for m in self.emask.values())
+
+    def cost_log2s(self) -> dict[int, int]:
+        return {v: popcount(self.node_mask(v)) for v in self.children}
+
+    def total_cost(self) -> float:
+        return sum(2.0 ** popcount(self.node_mask(v)) for v in self.children)
+
+    def log2_total_cost(self) -> float:
+        import math
+
+        return math.log2(self.total_cost())
+
+    def sliced_cost(self, smask: int) -> float:
+        """Eq. 6: total cost over all 2^|S| subtasks."""
+        s = popcount(smask)
+        tot = 0.0
+        for v in self.children:
+            nm = self.node_mask(v)
+            tot += 2.0 ** (popcount(nm) + s - popcount(smask & nm))
+        return tot
+
+    def slicing_overhead(self, smask: int) -> float:
+        """Eq. 4: O(B,S) = C_slice(B)·2^|S| / C(B)."""
+        return self.sliced_cost(smask) / self.total_cost()
+
+    def sliced_width(self, smask: int) -> int:
+        return max(popcount(m & ~smask) for m in self.emask.values())
+
+    # ------------------------------------------------------------------
+    # traversal / export
+    # ------------------------------------------------------------------
+    def contract_order(self) -> list[int]:
+        """Internal nodes in a valid (post-order) execution order."""
+        order: list[int] = []
+        stack = [(self.root, False)]
+        while stack:
+            v, done = stack.pop()
+            if self.is_leaf(v):
+                continue
+            if done:
+                order.append(v)
+            else:
+                l, r = self.children[v]
+                stack.append((v, True))
+                stack.append((r, False))
+                stack.append((l, False))
+        return order
+
+    def leaves_under(self, v: int) -> list[int]:
+        out: list[int] = []
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            if self.is_leaf(u):
+                out.append(u)
+            else:
+                stack.extend(self.children[u])
+        return out
+
+    def check_valid(self) -> None:
+        """Structural invariants (used by property tests)."""
+        leaves = sorted(self.leaves_under(self.root))
+        assert leaves == list(range(self.tn.num_tensors)), "leaf cover broken"
+        for v, (l, r) in self.children.items():
+            assert self.parent[l] == v and self.parent[r] == v
+            expect = self._result_mask(self.emask[l], self.emask[r])
+            assert self.emask[v] == expect, f"stale mask at node {v}"
+
+    def copy(self) -> "ContractionTree":
+        t = ContractionTree(self.tn)
+        t.children = dict(self.children)
+        t.parent = dict(self.parent)
+        t.emask = dict(self.emask)
+        t.root = self.root
+        t._next_id = self._next_id
+        return t
+
+    # ------------------------------------------------------------------
+    # local surgery (branch exchange / merge) — Secs. IV-C, V-B
+    # ------------------------------------------------------------------
+    def _replace_child(self, p: int, old: int, new: int) -> None:
+        l, r = self.children[p]
+        self.children[p] = (new, r) if l == old else (l, new)
+        self.parent[new] = p
+
+    def _refresh_up(self, v: int) -> None:
+        """Recompute emasks from ``v`` up to the root (stops early when a
+        mask is unchanged)."""
+        while v is not None and v in self.children:
+            l, r = self.children[v]
+            m = self._result_mask(self.emask[l], self.emask[r])
+            if m == self.emask[v]:
+                return
+            self.emask[v] = m
+            v = self.parent.get(v)
+
+    def exchange_at(self, p: int, q: int, branch_q: int, branch_p: int) -> None:
+        """Exchange ``branch_q`` (child of q) with ``branch_p`` (child of p),
+        where p is the parent of q.  The spine child of q stays put."""
+        assert self.parent[q] == p
+        assert branch_q in self.children[q], "stale branch id"
+        assert branch_p in self.children[p], "stale branch id"
+        self._replace_child(q, branch_q, branch_p)
+        self._replace_child(p, branch_p, branch_q)
+        # q's result changes; p's does not (same leaves), but refresh both
+        # for safety (refresh stops as soon as masks stabilize).
+        l, r = self.children[q]
+        self.emask[q] = self._result_mask(self.emask[l], self.emask[r])
+        self._refresh_up(p)
+
+    def merge_branches_at(self, p: int, q: int, branch_q: int, branch_p: int) -> int:
+        """Pre-contract two adjacent branches (Sec. V-B):
+
+        q = (T, B1), p = (q, B2)  →  p' = (T, M), M = (B1, B2).
+
+        Node q is re-purposed as the merge node M to keep ids stable.
+        Returns the id of the merge node.
+        """
+        assert self.parent[q] == p
+        assert branch_q in self.children[q], "stale branch id"
+        assert branch_p in self.children[p], "stale branch id"
+        spine = [c for c in self.children[q] if c != branch_q][0]
+        # rewire: p takes the spine tensor directly plus the merged branch
+        self.children[q] = (branch_q, branch_p)
+        self.parent[branch_p] = q
+        self.parent[branch_q] = q
+        self.children[p] = (spine, q)
+        self.parent[spine] = p
+        self.parent[q] = p
+        l, r = self.children[q]
+        self.emask[q] = self._result_mask(self.emask[l], self.emask[r])
+        self._refresh_up(p)
+        return q
+
+
+def ssa_to_linear(ssa_path: Sequence[tuple[int, int]], n: int) -> list[tuple[int, int]]:
+    """Convert an SSA path to opt_einsum-style linear format (positions in a
+    shrinking list)."""
+    ids = list(range(n))
+    out = []
+    for k, (a, b) in enumerate(ssa_path):
+        ia, ib = ids.index(a), ids.index(b)
+        if ia > ib:
+            ia, ib = ib, ia
+        out.append((ia, ib))
+        ids.pop(ib)
+        ids.pop(ia)
+        ids.append(n + k)
+    return out
+
+
+def linear_to_ssa(linear_path: Sequence[tuple[int, int]], n: int) -> list[tuple[int, int]]:
+    ids = list(range(n))
+    out = []
+    for k, (ia, ib) in enumerate(linear_path):
+        if ia > ib:
+            ia, ib = ib, ia
+        a, b = ids[ia], ids[ib]
+        out.append((a, b))
+        ids.pop(ib)
+        ids.pop(ia)
+        ids.append(n + k)
+    return out

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+contract_gemm    — tiled stem-contraction GEMM (the paper's hot-spot)
+flash_attention  — fused online-softmax attention for the LM fleet
+mamba2_ssd       — SSD intra-chunk kernel for mamba2/zamba2
+ops              — jit'd wrappers (padding, complex Karatsuba, GQA, combine)
+ref              — pure-jnp oracles
+"""
+
+from . import ops, ref  # noqa: F401

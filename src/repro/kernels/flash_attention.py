@@ -1,0 +1,111 @@
+"""Flash-attention forward kernel (fleet hot-spot for the LM architectures).
+
+Grid is (batch·heads, q_tiles): each invocation owns one (bq × d) query
+tile with the full K/V for that head resident in VMEM (32k × 128 × bf16 ≈
+8 MB each — fits v5e's VMEM budget), streaming K in ``bk`` chunks with an
+online-softmax accumulator.  Numerically stable (running max/sum), fp32
+accumulation, optional causal masking, GQA handled by the ops wrapper
+(K/V head broadcast before the call).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, *, bk: int, sm_scale: float, causal: bool,
+    q_offset_tiles: int,
+):
+    # q_ref: (bq, d); k_ref/v_ref: (seq_k, d); o_ref: (bq, d)
+    bq, d = q_ref.shape
+    seq_k = k_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    q_tile = pl.program_id(1)
+    q_start = (q_tile + q_offset_tiles) * bq
+
+    def body(kk, carry):
+        acc, m_i, l_i = carry
+        ks = kk * bk
+        k = k_ref[pl.ds(ks, bk), :].astype(jnp.float32)
+        v = v_ref[pl.ds(ks, bk), :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ks + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, d), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    n_kt = seq_k // bk
+    if causal:
+        # only K tiles at or before this Q tile's end participate
+        n_kt_eff = jnp.minimum(
+            n_kt, (q_start + bq + bk - 1) // bk
+        )
+    else:
+        n_kt_eff = n_kt
+    acc, m_i, l_i = jax.lax.fori_loop(0, n_kt_eff, body, (acc0, m0, l0))
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bq", "bk", "causal", "sm_scale", "interpret", "q_offset"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    bq: int = 128,
+    bk: int = 128,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (bh, seq_q, d); k, v: (bh, seq_k, d).  Returns (bh, seq_q, d).
+
+    ``q_offset``: absolute position of q[0] (for causal decode where
+    seq_q < seq_k); must be a multiple of bq.
+    """
+    bh, seq_q, d = q.shape
+    _, seq_k, _ = k.shape
+    assert seq_q % bq == 0 and seq_k % bk == 0 and q_offset % bq == 0
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    grid = (bh, seq_q // bq)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            bk=bk,
+            sm_scale=sm_scale,
+            causal=causal,
+            q_offset_tiles=q_offset // bq,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, seq_k, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq_q, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,90 @@
+"""Mamba-2 SSD (state-space duality) intra-chunk kernel.
+
+The SSD algorithm (arXiv:2405.21060) splits the selective-scan into
+matmul-heavy *intra-chunk* work (quadratic in the chunk length — MXU food)
+and a cheap linear *inter-chunk* state recurrence.  This kernel computes,
+for one (batch·head, chunk) grid cell with chunk length L, state size S,
+head dim D:
+
+    L_mat[i,j] = exp(cum_a[i] - cum_a[j]) · 1[i ≥ j]      (decay matrix)
+    Y_intra    = ((C Bᵀ) ⊙ L_mat) · (dt ⊙ X)              (L×L @ L×D)
+    state_out  = Σ_j exp(cum_a[L-1] - cum_a[j]) B_j (dt_j X_j)ᵀ  (S×D)
+
+The inter-chunk combine (carrying state with per-chunk decay and adding
+C · state_in) is a short ``lax.scan`` in ops.ssd_scan — O(seq/L) steps of
+O(S·D) work, negligible next to the intra-chunk matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref):
+    # shapes per grid cell: x (L, D), dt (L, 1), a (L, 1), b (L, S), c (L, S)
+    L, D = x_ref.shape
+    S = b_ref.shape[1]
+    x = x_ref[...].astype(jnp.float32)
+    dt = dt_ref[...].astype(jnp.float32)  # (L, 1)
+    a = a_ref[...].astype(jnp.float32)  # (L, 1) — per-step log-decay dt*A
+    b = b_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+
+    cum_a = jnp.cumsum(a[:, 0])  # (L,)
+    # decay matrix: exp(cum_a[i] - cum_a[j]) for i >= j else 0
+    diff = cum_a[:, None] - cum_a[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    l_mat = jnp.where(ii >= jj, jnp.exp(diff), 0.0)
+
+    scores = jnp.dot(c, b.T, preferred_element_type=jnp.float32) * l_mat
+    xdt = x * dt  # (L, D)
+    y_ref[...] = jnp.dot(scores, xdt, preferred_element_type=jnp.float32).astype(
+        y_ref.dtype
+    )
+    # chunk state: (S, D) = Σ_j decay_to_end[j] · b[j]ᵀ (xdt)[j]
+    decay_end = jnp.exp(cum_a[L - 1] - cum_a)  # (L,)
+    st_ref[...] = jnp.dot(
+        (b * decay_end[:, None]).T, xdt, preferred_element_type=jnp.float32
+    ).astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_chunk(
+    x: jax.Array,  # (BH, C, L, D)
+    dt: jax.Array,  # (BH, C, L)
+    a: jax.Array,  # (BH, C, L)  per-step log decay (dt * A_log)
+    b: jax.Array,  # (BH, C, L, S)
+    c: jax.Array,  # (BH, C, L, S)
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra (BH,C,L,D) fp32, chunk_states (BH,C,S,D) fp32)."""
+    BH, C, L, D = x.shape
+    S = b.shape[-1]
+    grid = (BH, C)
+    y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, L, D), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, L, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, L, 1), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, L, S), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, L, S), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, None, L, D), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, S, D), lambda i, j: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, C, L, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, C, S, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt[..., None], a[..., None], b, c)
+    return y, st

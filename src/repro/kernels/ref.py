@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """q: (bh, sq, d), k/v: (bh, sk, d) — naive softmax attention."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * sm_scale
+    if causal:
+        qp = q_offset + jnp.arange(sq)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        s = jnp.where(qp >= kp, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # (BH, T, D)
+    dt: jax.Array,  # (BH, T)
+    a: jax.Array,  # (BH, T) per-step log decay
+    b: jax.Array,  # (BH, T, S)
+    c: jax.Array,  # (BH, T, S)
+    state0: jax.Array | None = None,  # (BH, S, D)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential (exact) selective-scan reference:
+
+        h_t = exp(a_t) h_{t-1} + b_t (dt_t x_t)ᵀ ;  y_t = c_t h_t
+    """
+    BH, T, D = x.shape
+    S = b.shape[-1]
+    h0 = (
+        jnp.zeros((BH, S, D), jnp.float32)
+        if state0 is None
+        else state0.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp
+        h = jnp.exp(a_t)[:, None, None] * h + jnp.einsum(
+            "bs,bd->bsd", b_t, x_t * dt_t[:, None]
+        )
+        y = jnp.einsum("bs,bsd->bd", c_t, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(c.astype(jnp.float32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,223 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh (16×16 single-pod / 2×16×16 multi-pod) and
+record memory/cost/collective analysis for the roofline.
+
+Must be run as a fresh process (the XLA_FLAGS line above precedes any jax
+import — jax locks the device count on first init).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --mesh single --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, cell_applicable, get_config
+from ..models import build_model
+from ..parallel.sharding import (
+    abstract_params,
+    count_params,
+    logical_shardings,
+    param_shardings,
+    resolve_spec,
+)
+from ..roofline.analysis import (
+    active_param_count,
+    analyze_compiled,
+    model_flops,
+)
+from ..train import optimizer as opt
+from ..train.train_step import (
+    abstract_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_logical,
+)
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool = False,
+    moment_dtype: str = "float32",
+    recipe: str | None = None,
+) -> dict:
+    cfg = get_config(arch)
+    if recipe is None or recipe == "arch-default":
+        recipe = cfg.sharding_recipe
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    model = build_model(cfg)
+    defs = model.param_defs()
+    n_params = count_params(defs)
+    t0 = time.time()
+
+    abs_in, log_in = input_specs(arch, shape_name)
+
+    if shape.kind == "train":
+        ocfg = opt.OptimizerConfig(moment_dtype=moment_dtype)
+        step_fn = make_train_step(model, ocfg)
+        st_abs = abstract_state(model, ocfg)
+        st_sh = logical_shardings(
+            st_abs, state_logical(model, ocfg), mesh, recipe
+        )
+        b_sh = logical_shardings(
+            abs_in["batch"], log_in["batch"], mesh, recipe
+        )
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(st_sh, b_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(st_abs, abs_in["batch"])
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model)
+        p_sh = param_shardings(defs, mesh, recipe)
+        b_sh = logical_shardings(
+            abs_in["batch"], log_in["batch"], mesh, recipe
+        )
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(abstract_params(defs), abs_in["batch"])
+    else:  # decode
+        fn = make_decode_step(model)
+        p_sh = param_shardings(defs, mesh, recipe)
+        c_sh = logical_shardings(
+            abs_in["cache"], log_in["cache"], mesh, recipe
+        )
+        t_sh = logical_shardings(
+            abs_in["tokens"], log_in["tokens"], mesh, recipe
+        )
+        pos_sh = NamedSharding(mesh, P())
+        args = [
+            abstract_params(defs),
+            abs_in["cache"],
+            abs_in["tokens"],
+            abs_in["pos"],
+        ]
+        in_sh = [p_sh, c_sh, t_sh, pos_sh]
+        if cfg.mrope:
+            args.append(abs_in["mrope_positions"])
+            in_sh.append(
+                logical_shardings(
+                    abs_in["mrope_positions"], log_in["mrope_positions"],
+                    mesh, recipe,
+                )
+            )
+        jitted = jax.jit(
+            fn,
+            in_shardings=tuple(in_sh),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(*args)
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    roof = analyze_compiled(compiled, n_dev)
+    n_active = active_param_count(cfg, n_params)
+    mflops = model_flops(cfg, shape, n_active)
+    summary = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "params": n_params,
+        "active_params": n_active,
+        "moment_dtype": moment_dtype,
+        "recipe": recipe,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "roofline": roof.summary(),
+        "model_flops_global": mflops,
+        "useful_ratio": (
+            mflops / (roof.flops * n_dev) if roof.flops else None
+        ),
+    }
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--moments", default="float32", choices=["float32", "int8"])
+    ap.add_argument("--recipe", default="arch-default")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.mesh}"
+    if args.moments != "float32":
+        tag += f"__m{args.moments}"
+    if args.recipe not in ("default", "arch-default"):
+        tag += f"__r{args.recipe}"
+    path = os.path.join(args.out, tag + ".json")
+    try:
+        res = dryrun_cell(
+            args.arch,
+            args.shape,
+            multi_pod=(args.mesh == "multi"),
+            moment_dtype=args.moments,
+            recipe=args.recipe,
+        )
+    except Exception as e:
+        res = {
+            "arch": args.arch,
+            "shape": args.shape,
+            "mesh": args.mesh,
+            "error": repr(e),
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    if "error" in res:
+        print(f"FAIL {tag}: {res['error']}")
+        raise SystemExit(1)
+    if "skipped" in res:
+        print(f"SKIP {tag}: {res['skipped']}")
+        return
+    r = res["roofline"]
+    print(
+        f"OK {tag}: compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+        f"collective={r['collective_s']:.3e}s dominant={r['dominant']} "
+        f"useful={res['useful_ratio'] and round(res['useful_ratio'],3)} "
+        f"compile={res['compile_s']}s"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins + logical shardings for every model input.
+
+``input_specs(arch, shape)`` returns, per the cell's kind:
+
+  train:   {"batch": {...}}                         → train_step(state, batch)
+  prefill: {"batch": {...}}                         → prefill(params, batch)
+  decode:  {"cache": {...}, "tokens": …, "pos": …}  → decode_step(...)
+
+plus a parallel tree of *logical* axis tuples (resolved against the active
+mesh by parallel.sharding.resolve_spec).  No array is ever allocated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..models import build_model
+
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(arch: str, shape_name: str):
+    """Returns (abstract_inputs, logical_shardings) dicts."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    model = build_model(cfg)
+
+    if sh.kind in ("train", "prefill"):
+        batch: dict = {}
+        logical: dict = {}
+        if cfg.family == "encdec":
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16
+            )
+            logical["embeds"] = ("dp", None, None)
+            batch["tokens"] = _tok((B, S))
+            logical["tokens"] = ("dp", None)
+        elif cfg.embed_inputs:
+            batch["embeds"] = jax.ShapeDtypeStruct(
+                (B, S, cfg.d_model), jnp.bfloat16
+            )
+            logical["embeds"] = ("dp", None, None)
+        else:
+            batch["tokens"] = _tok((B, S))
+            logical["tokens"] = ("dp", None)
+        if cfg.mrope:
+            batch["positions"] = _tok((3, B, S))
+            logical["positions"] = (None, "dp", None)
+        if sh.kind == "train":
+            batch["labels"] = _tok((B, S))
+            logical["labels"] = ("dp", None)
+        return {"batch": batch}, {"batch": logical}
+
+    # decode: cache + one token
+    cache_spec = model.cache_spec(B, S)
+    is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(
+        x[0], jax.ShapeDtypeStruct
+    )
+    cache_abs = jax.tree.map(lambda t: t[0], cache_spec, is_leaf=is_pair)
+    cache_log = jax.tree.map(lambda t: t[1], cache_spec, is_leaf=is_pair)
+    # "layer" axis is never sharded
+    cache_log = jax.tree.map(
+        lambda log: tuple(None if a == "layer" else a for a in log),
+        cache_log,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    out = {
+        "cache": cache_abs,
+        "tokens": _tok((B, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    log = {
+        "cache": cache_log,
+        "tokens": ("dp", None),
+        "pos": (),
+    }
+    if cfg.mrope:
+        out["mrope_positions"] = _tok((3, B, 1))
+        log["mrope_positions"] = (None, "dp", None)
+    return out, log

@@ -1,0 +1,82 @@
+"""Run the full dry-run matrix as subprocesses (fresh process per cell —
+XLA device-count flags are locked at first jax init), skipping cells whose
+JSON already exists.  Order: single-pod first (roofline table), smallest
+architectures first (early signal)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ORDER = [
+    "mamba2-130m",
+    "seamless-m4t-medium",
+    "llama3.2-3b",
+    "qwen3-4b",
+    "zamba2-7b",
+    "deepseek-7b",
+    "deepseek-moe-16b",
+    "qwen2-vl-72b",
+    "llama4-scout-17b-a16e",
+    "llama3-405b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    todo = []
+    for mesh in meshes:
+        for arch in ORDER:
+            for shape in SHAPES:
+                todo.append((arch, shape, mesh))
+    env = dict(os.environ, PYTHONPATH="src")
+    n_ok = n_fail = n_skip = 0
+    for arch, shape, mesh in todo:
+        tag = f"{arch}__{shape}__{mesh}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            with open(path) as f:
+                prev = json.load(f)
+            if "error" not in prev:
+                print(f"CACHED {tag}", flush=True)
+                continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", mesh,
+            "--out", args.out,
+        ]
+        extra = []
+        if arch == "llama3-405b" and shape == "train_4k":
+            extra = ["--moments", "int8"]  # fp32 variant run separately
+        try:
+            r = subprocess.run(
+                cmd + extra, env=env, timeout=args.timeout,
+                capture_output=True, text=True, cwd=os.getcwd(),
+            )
+            out = (r.stdout + r.stderr).strip().splitlines()
+            print(out[-1] if out else f"?? {tag}", flush=True)
+            if r.returncode == 0:
+                n_ok += 1
+            else:
+                n_fail += 1
+        except subprocess.TimeoutExpired:
+            print(f"TIMEOUT {tag}", flush=True)
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "error": "compile timeout"}, f)
+            n_fail += 1
+    print(f"done: ok={n_ok} fail={n_fail}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Architecture fleet — model factory."""
+
+from __future__ import annotations
+
+from ..configs.base import ArchConfig
+from .encdec import EncDecLM
+from .hybrid import ZambaLM
+from .lm import DecoderLM
+from .ssm_model import MambaLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe"):
+        return DecoderLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return ZambaLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+__all__ = ["build_model", "DecoderLM", "MambaLM", "ZambaLM", "EncDecLM"]

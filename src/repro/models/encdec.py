@@ -1,0 +1,247 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, D).  Encoder layers are
+bidirectional; decoder layers are causal self-attention + cross-attention
+to the encoder memory.  Decode shapes run the decoder with a KV cache and
+precomputed cross-attention K/V (encoder memory is fixed at decode time).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParamDef
+from . import layers as L
+
+F32 = jnp.float32
+
+
+def _block_defs(cfg: ArchConfig, n: int, cross: bool) -> dict:
+    D, H, KV, hd = (
+        cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    )
+    d = {
+        "wq": ParamDef((n, D, H, hd), (None, "fsdp", "tp", None)),
+        "wk": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+        "wv": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+        "wo": ParamDef((n, H, hd, D), (None, "tp", None, "fsdp")),
+        "ln_attn": ParamDef((n, D), (None, None), init="ones"),
+        "w_gate": ParamDef((n, D, cfg.d_ff), (None, "fsdp", "tp")),
+        "w_up": ParamDef((n, D, cfg.d_ff), (None, "fsdp", "tp")),
+        "w_down": ParamDef((n, cfg.d_ff, D), (None, "tp", "fsdp")),
+        "ln_mlp": ParamDef((n, D), (None, None), init="ones"),
+    }
+    if cross:
+        d.update(
+            {
+                "xq": ParamDef((n, D, H, hd), (None, "fsdp", "tp", None)),
+                "xk": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+                "xv": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+                "xo": ParamDef((n, H, hd, D), (None, "tp", None, "fsdp")),
+                "ln_x": ParamDef((n, D), (None, None), init="ones"),
+            }
+        )
+    return d
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def param_defs(self):
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab_size
+        return {
+            "embed": ParamDef((V, D), ("tp", "fsdp"), scale=0.02),
+            "enc_layers": _block_defs(cfg, cfg.encoder_layers, cross=False),
+            "dec_layers": _block_defs(cfg, cfg.num_layers, cross=True),
+            "enc_norm": ParamDef((D,), (None,), init="ones"),
+            "final_norm": ParamDef((D,), (None,), init="ones"),
+            "head": ParamDef((D, V), ("fsdp", "tp"), scale=0.02),
+        }
+
+    # ------------------------------------------------------------- blocks
+    def _self_attn(self, p, h, positions, causal, cache=None, pos=None):
+        cfg = self.cfg
+        x = L.rms_norm(h, p["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if cache is None:
+            o = L.blockwise_attention(q, k, v, causal=causal)
+            new_cache = (k, v)
+        else:
+            kc, vc = cache
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, 1)
+            o = L.decode_attention(q, kc, vc, pos + 1)
+            new_cache = (kc, vc)
+        return h + jnp.einsum("bshk,hkd->bsd", o.astype(h.dtype), p["wo"]), new_cache
+
+    def _cross_attn(self, p, h, mem_k, mem_v):
+        cfg = self.cfg
+        x = L.rms_norm(h, p["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["xq"])
+        o = L.blockwise_attention(q, mem_k, mem_v, causal=False)
+        return h + jnp.einsum("bshk,hkd->bsd", o.astype(h.dtype), p["xo"])
+
+    def _mlp(self, p, h):
+        x = L.rms_norm(h, p["ln_mlp"], self.cfg.norm_eps)
+        return h + L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+    def encode(self, params, embeds):
+        B, S, D = embeds.shape
+        h = embeds.astype(jnp.bfloat16)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(hh, lp):
+            hh, _ = self._self_attn(lp, hh, positions, causal=False)
+            hh = self._mlp(lp, hh)
+            return hh, None
+
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+        h, _ = jax.lax.scan(body, h, params["enc_layers"])
+        return L.rms_norm(h, params["enc_norm"], self.cfg.norm_eps)
+
+    def _mem_kv(self, lp, mem):
+        k = jnp.einsum("bsd,dhk->bshk", mem, lp["xk"])
+        v = jnp.einsum("bsd,dhk->bshk", mem, lp["xv"])
+        return k, v
+
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        mem = self.encode(params, batch["embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        h = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def body(hh, lp):
+            hh, _ = self._self_attn(lp, hh, positions, causal=True)
+            mk, mv = self._mem_kv(lp, mem)
+            hh = self._cross_attn(lp, hh, mk, mv)
+            hh = self._mlp(lp, hh)
+            return hh, None
+
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+        h, _ = jax.lax.scan(body, h, params["dec_layers"])
+        return L.rms_norm(h, params["final_norm"], cfg.norm_eps), jnp.zeros(
+            (), F32
+        )
+
+    def head_weights(self, params):
+        return params["head"]
+
+    def loss(self, params, batch):
+        from .losses import chunked_cross_entropy
+
+        h, aux = self.hidden_states(params, batch)
+        loss = chunked_cross_entropy(h, params["head"], batch["labels"])
+        return loss, {"xent": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def cache_spec(self, batch_size: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        n = cfg.num_layers
+        enc_len = enc_len or max_len
+        kv = lambda s: (
+            jax.ShapeDtypeStruct(
+                (n, batch_size, s, cfg.num_kv_heads, hd), jnp.bfloat16
+            ),
+            ("layer", "dp", "sp", None, None),
+        )
+        return {
+            "self_k": kv(max_len),
+            "self_v": kv(max_len),
+            "cross_k": kv(enc_len),
+            "cross_v": kv(enc_len),
+        }
+
+    def init_cache(self, batch_size: int, max_len: int, enc_len: int = 0):
+        return jax.tree.map(
+            lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+            self.cache_spec(batch_size, max_len, enc_len),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+        )
+
+    def decode_step(self, params, cache, tokens, pos, mrope_positions=None):
+        cfg = self.cfg
+        h = params["embed"][tokens]
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+
+        def body(hh, xs):
+            lp, kc, vc, xk, xv = xs
+            hh, (kc2, vc2) = self._self_attn(
+                lp, hh, positions, causal=True, cache=(kc, vc), pos=pos
+            )
+            x = L.rms_norm(hh, lp["ln_x"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dhk->bshk", x, lp["xq"])
+            o = L.decode_attention(q, xk, xv, xk.shape[1])
+            hh = hh + jnp.einsum("bshk,hkd->bsd", o.astype(hh.dtype), lp["xo"])
+            hh = self._mlp(lp, hh)
+            return hh, (kc2, vc2)
+
+        h, (kc, vc) = jax.lax.scan(
+            body,
+            h,
+            (
+                params["dec_layers"],
+                cache["self_k"],
+                cache["self_v"],
+                cache["cross_k"],
+                cache["cross_v"],
+            ),
+        )
+        new_cache = dict(cache, self_k=kc, self_v=vc)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, 0], params["head"])
+        return logits.astype(F32), new_cache
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Encode + run the decoder prompt, building all caches."""
+        cfg = self.cfg
+        mem = self.encode(params, batch["embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        h = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        def fit(k):
+            pad = max_len - k.shape[1]
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+            return k.astype(jnp.bfloat16)
+
+        def body(hh, lp):
+            hh, (k, v) = self._self_attn(lp, hh, positions, causal=True)
+            mk, mv = self._mem_kv(lp, mem)
+            hh = self._cross_attn(lp, hh, mk, mv)
+            hh = self._mlp(lp, hh)
+            return hh, (
+                fit(k), fit(v),
+                mk.astype(jnp.bfloat16), mv.astype(jnp.bfloat16),
+            )
+
+        h, (ks, vs, mks, mvs) = jax.lax.scan(body, h, params["dec_layers"])
+        cache = {
+            "self_k": ks, "self_v": vs, "cross_k": mks, "cross_v": mvs,
+        }
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"])
+        return cache, logits.astype(F32)

@@ -1,0 +1,348 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The backbone is ``num_layers`` mamba2 mixers; after every ``attn_every``
+mixers, a single shared transformer block (one weight set, zamba's
+signature parameter-sharing trick) is applied — each application has its
+own KV cache slot.  Sliding-window attention (``cfg.window``) keeps the
+500k-context decode sub-quadratic: the cache is a ring buffer of
+``window`` slots.
+
+Layer layout for 81 layers / attn_every 6:
+  13 groups of (6 mamba + shared attn)  +  3 tail mamba layers.
+Groups are scanned (group params stacked on a leading 13 axis, inner
+mini-scan over the 6) so HLO stays O(1) in depth.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParamDef
+from . import layers as L
+from .ssm_model import mamba_defs
+
+F32 = jnp.float32
+
+
+class ZambaLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0
+        self.n_groups = cfg.num_layers // cfg.attn_every
+        self.n_tail = cfg.num_layers - self.n_groups * cfg.attn_every
+
+    # -------------------------------------------------------------- params
+    def param_defs(self):
+        cfg = self.cfg
+        D, hd = cfg.d_model, cfg.resolved_head_dim
+        H, KV = cfg.num_heads, cfg.num_kv_heads
+        defs: dict[str, Any] = {
+            "embed": ParamDef((cfg.vocab_size, D), ("tp", "fsdp"), scale=0.02),
+            "final_norm": ParamDef((D,), (None,), init="ones"),
+            "head": ParamDef((D, cfg.vocab_size), ("fsdp", "tp"), scale=0.02),
+            "groups": _stack_defs(
+                mamba_defs(cfg, cfg.attn_every), self.n_groups
+            ),
+            # one shared transformer block (attn + mlp), applied 13×
+            "shared": {
+                "wq": ParamDef((D, H, hd), ("fsdp", "tp", None)),
+                "wk": ParamDef((D, KV, hd), ("fsdp", "tp", None)),
+                "wv": ParamDef((D, KV, hd), ("fsdp", "tp", None)),
+                "wo": ParamDef((H, hd, D), ("tp", None, "fsdp")),
+                "ln_attn": ParamDef((D,), (None,), init="ones"),
+                "w_gate": ParamDef((D, cfg.d_ff), ("fsdp", "tp")),
+                "w_up": ParamDef((D, cfg.d_ff), ("fsdp", "tp")),
+                "w_down": ParamDef((cfg.d_ff, D), ("tp", "fsdp")),
+                "ln_mlp": ParamDef((D,), (None,), init="ones"),
+            },
+        }
+        if self.n_tail:
+            defs["tail"] = mamba_defs(cfg, self.n_tail)
+        return defs
+
+    # ------------------------------------------------------------- blocks
+    def _mamba(self, lp, h, ssm_state=None, conv_state=None):
+        cfg = self.cfg
+        x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, (s2, c2) = L.mamba2_mix(
+            x, lp,
+            d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand,
+            ssm_state=ssm_state,
+            conv_state=conv_state,
+        )
+        return h + y, s2, c2
+
+    def _shared_attn(self, sp, h, positions, kv_cache=None, pos=None):
+        cfg = self.cfg
+        x = L.rms_norm(h, sp["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, sp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, sp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, sp["wv"])
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if kv_cache is None:
+            o = L.blockwise_attention(q, k, v, causal=True, window=cfg.window)
+            new_cache = (k, v)
+        else:
+            kc, vc = kv_cache
+            eff = kc.shape[1]
+            slot = pos % eff
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, 1)
+            o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, eff))
+            new_cache = (kc, vc)
+        h = h + jnp.einsum("bshk,hkd->bsd", o.astype(h.dtype), sp["wo"])
+        x = L.rms_norm(h, sp["ln_mlp"], cfg.norm_eps)
+        h = h + L.swiglu(x, sp["w_gate"], sp["w_up"], sp["w_down"])
+        return h, new_cache
+
+    # ------------------------------------------------------------ forward
+    def hidden_states(self, params, batch):
+        cfg = self.cfg
+        h = params["embed"][batch["tokens"]]
+        B, S = batch["tokens"].shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        shared = params["shared"]
+
+        def group_body(hh, gp):
+            def inner(hh2, lp):
+                hh2, _, _ = self._mamba(lp, hh2)
+                return hh2, None
+
+            hh, _ = jax.lax.scan(inner, hh, gp)
+            hh, _ = self._shared_attn(shared, hh, positions)
+            return hh, None
+
+        group_body = jax.checkpoint(
+            group_body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+        h, _ = jax.lax.scan(group_body, h, params["groups"])
+        if self.n_tail:
+            def tail_body(hh, lp):
+                hh, _, _ = self._mamba(lp, hh)
+                return hh, None
+
+            h, _ = jax.lax.scan(tail_body, h, params["tail"])
+        return L.rms_norm(h, params["final_norm"], cfg.norm_eps), jnp.zeros(
+            (), F32
+        )
+
+    def head_weights(self, params):
+        return params["head"]
+
+    def loss(self, params, batch):
+        from .losses import chunked_cross_entropy
+
+        h, aux = self.hidden_states(params, batch)
+        loss = chunked_cross_entropy(h, params["head"], batch["labels"])
+        return loss, {"xent": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def cache_spec(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        conv_dim = d_inner + 2 * cfg.ssm_state
+        eff = min(cfg.window, max_len) if cfg.window else max_len
+        hd = cfg.resolved_head_dim
+        ng, ae = self.n_groups, cfg.attn_every
+        spec = {
+            "ssm": (
+                jax.ShapeDtypeStruct(
+                    (ng, ae, batch_size, nheads, cfg.ssm_state,
+                     cfg.ssm_head_dim), F32,
+                ),
+                ("layer", None, "dp", "tp", None, None),
+            ),
+            "conv_x": (
+                jax.ShapeDtypeStruct(
+                    (ng, ae, batch_size, cfg.ssm_conv - 1, d_inner),
+                    jnp.bfloat16,
+                ),
+                ("layer", None, "dp", None, "tp"),
+            ),
+            "conv_bc": (
+                jax.ShapeDtypeStruct(
+                    (ng, ae, batch_size, cfg.ssm_conv - 1,
+                     2 * cfg.ssm_state),
+                    jnp.bfloat16,
+                ),
+                ("layer", None, "dp", None, "tp"),
+            ),
+            "attn_k": (
+                jax.ShapeDtypeStruct(
+                    (ng, batch_size, eff, cfg.num_kv_heads, hd), jnp.bfloat16
+                ),
+                ("layer", "dp", "sp", None, None),
+            ),
+            "attn_v": (
+                jax.ShapeDtypeStruct(
+                    (ng, batch_size, eff, cfg.num_kv_heads, hd), jnp.bfloat16
+                ),
+                ("layer", "dp", "sp", None, None),
+            ),
+        }
+        if self.n_tail:
+            spec["tail_ssm"] = (
+                jax.ShapeDtypeStruct(
+                    (self.n_tail, batch_size, nheads, cfg.ssm_state,
+                     cfg.ssm_head_dim), F32,
+                ),
+                ("layer", "dp", "tp", None, None),
+            )
+            spec["tail_conv_x"] = (
+                jax.ShapeDtypeStruct(
+                    (self.n_tail, batch_size, cfg.ssm_conv - 1, d_inner),
+                    jnp.bfloat16,
+                ),
+                ("layer", "dp", None, "tp"),
+            )
+            spec["tail_conv_bc"] = (
+                jax.ShapeDtypeStruct(
+                    (self.n_tail, batch_size, cfg.ssm_conv - 1,
+                     2 * cfg.ssm_state),
+                    jnp.bfloat16,
+                ),
+                ("layer", "dp", None, "tp"),
+            )
+        return spec
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return jax.tree.map(
+            lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+            self.cache_spec(batch_size, max_len),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+        )
+
+    def decode_step(self, params, cache, tokens, pos, mrope_positions=None):
+        cfg = self.cfg
+        h = params["embed"][tokens]
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        shared = params["shared"]
+
+        def group_body(hh, xs):
+            gp, s, cx, cbc, kc, vc = xs
+
+            def inner(hh2, xs2):
+                lp, s_i, cx_i, cbc_i = xs2
+                hh2, s2, (cx2, cbc2) = self._mamba(
+                    lp, hh2, s_i, (cx_i, cbc_i)
+                )
+                return hh2, (s2, cx2.astype(jnp.bfloat16),
+                             cbc2.astype(jnp.bfloat16))
+
+            hh, (s_new, cx_new, cbc_new) = jax.lax.scan(
+                inner, hh, (gp, s, cx, cbc)
+            )
+            hh, (kc2, vc2) = self._shared_attn(
+                shared, hh, positions, kv_cache=(kc, vc), pos=pos
+            )
+            return hh, (s_new, cx_new, cbc_new, kc2, vc2)
+
+        h, (s_new, cx_new, cbc_new, kc_new, vc_new) = jax.lax.scan(
+            group_body,
+            h,
+            (
+                params["groups"],
+                cache["ssm"],
+                cache["conv_x"],
+                cache["conv_bc"],
+                cache["attn_k"],
+                cache["attn_v"],
+            ),
+        )
+        new_cache = dict(
+            cache, ssm=s_new, conv_x=cx_new, conv_bc=cbc_new,
+            attn_k=kc_new, attn_v=vc_new,
+        )
+        if self.n_tail:
+            def tail_body(hh, xs):
+                lp, s, cx, cbc = xs
+                hh, s2, (cx2, cbc2) = self._mamba(lp, hh, s, (cx, cbc))
+                return hh, (s2, cx2.astype(jnp.bfloat16),
+                            cbc2.astype(jnp.bfloat16))
+
+            h, (ts, tcx, tcbc) = jax.lax.scan(
+                tail_body, h,
+                (params["tail"], cache["tail_ssm"], cache["tail_conv_x"],
+                 cache["tail_conv_bc"]),
+            )
+            new_cache["tail_ssm"] = ts
+            new_cache["tail_conv_x"] = tcx
+            new_cache["tail_conv_bc"] = tcbc
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, 0], params["head"])
+        return logits.astype(F32), new_cache
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        eff = min(cfg.window, max_len) if cfg.window else max_len
+        h = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        shared = params["shared"]
+
+        def fit(k):
+            k = k[:, -eff:]
+            pad = eff - k.shape[1]
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+            return k.astype(jnp.bfloat16)
+
+        def group_body(hh, gp):
+            def inner(hh2, lp):
+                hh2, s2, (cx2, cbc2) = self._mamba(lp, hh2)
+                return hh2, (s2, cx2.astype(jnp.bfloat16),
+                             cbc2.astype(jnp.bfloat16))
+
+            hh, (s_new, cx_new, cbc_new) = jax.lax.scan(inner, hh, gp)
+            hh, (k, v) = self._shared_attn(shared, hh, positions)
+            return hh, (s_new, cx_new, cbc_new, fit(k), fit(v))
+
+        h, (s_new, cx_new, cbc_new, ks, vs) = jax.lax.scan(
+            group_body, h, params["groups"]
+        )
+        cache = {
+            "ssm": s_new,
+            "conv_x": cx_new,
+            "conv_bc": cbc_new,
+            "attn_k": ks,
+            "attn_v": vs,
+        }
+        if self.n_tail:
+            def tail_body(hh, lp):
+                hh, s2, (cx2, cbc2) = self._mamba(lp, hh)
+                return hh, (s2, cx2.astype(jnp.bfloat16),
+                            cbc2.astype(jnp.bfloat16))
+
+            h, (ts, tcx, tcbc) = jax.lax.scan(tail_body, h, params["tail"])
+            cache["tail_ssm"] = ts
+            cache["tail_conv_x"] = tcx
+            cache["tail_conv_bc"] = tcbc
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["head"])
+        return cache, logits.astype(F32)
+
+
+def _stack_defs(defs: dict, n: int) -> dict:
+    """Add a leading stacking axis of size n to every ParamDef in a dict."""
+    out = {}
+    for k, d in defs.items():
+        out[k] = ParamDef(
+            (n,) + d.shape,
+            (None,) + d.logical,
+            init=d.init,
+            scale=d.scale,
+            dtype=d.dtype,
+        )
+    return out

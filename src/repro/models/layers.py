@@ -1,0 +1,471 @@
+"""Shared neural building blocks for the architecture fleet (pure JAX).
+
+Everything is functional: params are pytrees built from ParamDef
+declarations (parallel/sharding.py).  Attention is implemented blockwise
+(online softmax over key blocks, exact causal extents per query block) so
+the compiled HLO never materializes an (S × S) score matrix — the same
+algorithm as kernels/flash_attention.py, which replaces it on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(F32)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# rotary embeddings
+# ----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (B, S) int32
+    theta: float = 1e4,
+) -> jax.Array:
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    ang = positions[..., None].astype(F32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,  # (B, S, H, D)
+    positions: jax.Array,  # (3, B, S) int32 — temporal/height/width
+    theta: float = 1e4,
+    sections: tuple[int, int, int] = (2, 1, 1),  # D/2 split ratio t:h:w
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the D/2 frequency bands are split into
+    three sections rotated by the temporal / height / width positions."""
+    D = x.shape[-1]
+    half = D // 2
+    tot = sum(sections)
+    bounds = [half * sum(sections[: i + 1]) // tot for i in range(3)]
+    freqs = rope_freqs(D, theta)  # (half,)
+    parts = []
+    lo = 0
+    for i, hi in enumerate(bounds):
+        ang = positions[i][..., None].astype(F32) * freqs[lo:hi]
+        parts.append(ang)
+        lo = hi
+    ang = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# blockwise attention (flash-style, jnp; exact causal extents)
+# ----------------------------------------------------------------------
+def _attn_block(qi, k_ctx, v_ctx, q_pos0: int, k_pos0: int, *,
+                causal: bool, sm_scale: float, bk: int, window: int = 0):
+    """One query block vs its full (static) key context, streamed in key
+    blocks of ``bk`` with an online softmax.  All fp32."""
+    B, bq, H, Dh = qi.shape
+    Sk = k_ctx.shape[1]
+    nk = Sk // bk
+    q = qi.astype(F32) * sm_scale
+    kb = k_ctx.reshape(B, nk, bk, H, Dh)
+    vb = v_ctx.reshape(B, nk, bk, H, Dh)
+
+    def step(carry, inp):
+        acc, m_i, l_i = carry
+        kj, vj, j = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kj.astype(F32))
+        if causal or window:
+            qp = q_pos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kp = k_pos0 + j * bk + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, bk), 1
+            )
+            ok = (qp >= kp) if causal else (qp == qp)
+            if window:
+                ok &= kp > qp - window
+            s = jnp.where(ok[None, None], s, -1e30)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vj.astype(F32)
+        )
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, H, bq, Dh), F32)
+    m0 = jnp.full((B, H, bq), -1e30, F32)
+    l0 = jnp.zeros((B, H, bq), F32)
+    (acc, _, l_i), _ = jax.lax.scan(
+        step,
+        (acc0, m0, l0),
+        (
+            jnp.moveaxis(kb, 1, 0),
+            jnp.moveaxis(vb, 1, 0),
+            jnp.arange(nk),
+        ),
+    )
+    out = acc / jnp.maximum(l_i, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3)  # (B, bq, H, Dh)
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, H, Dh)
+    k: jax.Array,  # (B, Sk, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    window: int = 0,
+    bq: int = 256,
+    bk: int = 512,
+) -> jax.Array:
+    """Flash-style attention in plain jnp.  Query blocks are a Python loop
+    (static shapes, exact causal key extents — no masked-block waste);
+    key blocks stream through a scan (O(B·H·bq·bk) live memory)."""
+    B, Sq, H, Dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    group = H // Hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    sm_scale = 1.0 / math.sqrt(Dh)
+    bq = min(bq, Sq)
+    outs = []
+    nq = -(-Sq // bq)
+    for i in range(nq):
+        q0 = i * bq
+        qi = q[:, q0 : q0 + bq]
+        q_abs0 = q_offset + q0
+        hi = min(Sk, q_abs0 + qi.shape[1]) if causal else Sk
+        # earliest key any query in this block may see
+        lo = max(0, q_abs0 + 1 - window) if window else 0
+        lo = min(lo, hi - 1) if hi > 0 else 0
+        # align to bk
+        lo_a = (lo // bk) * bk
+        hi_a = -(-hi // bk) * bk
+        hi_a = min(hi_a, ((Sk + bk - 1) // bk) * bk)
+        if hi_a > Sk:  # pad keys once if needed
+            pad = hi_a - Sk
+            k_ctx = jnp.pad(k[:, lo_a:Sk], ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_ctx = jnp.pad(v[:, lo_a:Sk], ((0, 0), (0, pad), (0, 0), (0, 0)))
+        else:
+            k_ctx = k[:, lo_a:hi_a]
+            v_ctx = v[:, lo_a:hi_a]
+        outs.append(
+            _attn_block(
+                qi, k_ctx, v_ctx, q_abs0, lo_a,
+                causal=causal, sm_scale=sm_scale, bk=min(bk, k_ctx.shape[1]),
+                window=window,
+            ).astype(q.dtype)
+        )
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, Dh)
+    k_cache: jax.Array,  # (B, S, Hkv, Dh)
+    v_cache: jax.Array,
+    num_valid: jax.Array,  # () int32 — number of valid cache slots
+) -> jax.Array:
+    """Single-token decode attention over a KV cache with dynamic validity
+    masking.  Works for both linear caches (num_valid = pos + 1) and ring
+    buffers (num_valid = min(pos + 1, window); slot order is irrelevant to
+    the softmax, and keys carry their RoPE phase from write time)."""
+    B, S, Hkv, Dh = k_cache.shape
+    H = q.shape[2]
+    group = H // Hkv
+    sm_scale = 1.0 / math.sqrt(Dh)
+    qf = q.astype(F32) * sm_scale  # (B, 1, H, D)
+    kf = k_cache.astype(F32)
+    if group > 1:
+        qg = qf.reshape(B, 1, Hkv, group, Dh)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)  # (B,Hkv,g,1,S)
+        s = s.reshape(B, H, 1, S)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    valid = jnp.arange(S) < num_valid
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    if group > 1:
+        pg = p.reshape(B, Hkv, group, 1, S)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pg, v_cache.astype(F32))
+        o = o.reshape(B, 1, H, Dh)
+    else:
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(F32))
+    return o.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLPs
+# ----------------------------------------------------------------------
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+# ----------------------------------------------------------------------
+# Mixture of Experts (capacity routing, EP-friendly scatter/gather)
+# ----------------------------------------------------------------------
+def moe_layer(
+    x: jax.Array,  # (B, S, D)
+    router_w: jax.Array,  # (D, E)
+    w_gate: jax.Array,  # (E, D, F)
+    w_up: jax.Array,  # (E, D, F)
+    w_down: jax.Array,  # (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    dispatch: str = "sort",
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k token-choice routing with per-expert capacity (tokens over
+    capacity are dropped, standard Switch/GShard semantics).
+
+    Dispatch is a scatter into (E·C, D) expert buffers and the expert FFN
+    is one stacked einsum — sharding E over the "model"/ep axis gives
+    expert parallelism with XLA inserting the all-to-alls.
+
+    ``dispatch``: how position-in-expert is computed.
+      "sort"   — argsort + searchsorted, O(T·k log) and no (T·k, E)
+                 intermediate (§Perf iteration 3: the dry-run exposed the
+                 one-hot cumsum as a reduce-window FLOPs bomb).
+      "cumsum" — classic GShard one-hot cumsum (kept for comparison).
+
+    Returns (y (B,S,D), aux_loss ()).
+    """
+    B, S, D = x.shape
+    E = router_w.shape[1]
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = jnp.einsum("td,de->te", xf.astype(F32), router_w.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    gate, ids = jax.lax.top_k(probs, top_k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * Σ_e f_e · p_e  (scatter-based —
+    # no (T, E) one-hot needed)
+    f_e = jnp.zeros((E,), F32).at[ids[:, 0]].add(1.0) / T
+    aux = E * jnp.mean(f_e * jnp.mean(probs, axis=0))
+
+    cap = int(capacity_factor * T * top_k / E)
+    cap = max(8, -(-cap // 8) * 8)  # align
+    flat_ids = ids.reshape(-1)  # (T·k,)
+    if dispatch == "sort":
+        sort_idx = jnp.argsort(flat_ids, stable=True)
+        sorted_ids = flat_ids[sort_idx]
+        starts = jnp.searchsorted(sorted_ids, jnp.arange(E))  # (E,)
+        pos_sorted = jnp.arange(T * top_k) - starts[sorted_ids]
+        mypos = jnp.zeros((T * top_k,), jnp.int32).at[sort_idx].set(
+            pos_sorted.astype(jnp.int32)
+        )
+    else:  # cumsum (GShard classic)
+        onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)  # (T·k, E)
+        pos_all = jnp.cumsum(onehot, axis=0) - 1
+        mypos = jnp.take_along_axis(pos_all, flat_ids[:, None], axis=1)[:, 0]
+    keep = mypos < cap
+    dest = jnp.where(keep, flat_ids * cap + mypos, E * cap)  # E*cap = trash
+    tok = jnp.repeat(jnp.arange(T), top_k)
+    xin = xf[tok]  # (T·k, D)
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[dest].add(
+        jnp.where(keep[:, None], xin, 0)
+    )[: E * cap]
+    h = buf.reshape(E, cap, D)
+    gates = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    ups = jnp.einsum("ecd,edf->ecf", h, w_up)
+    act = jax.nn.silu(gates.astype(F32)).astype(x.dtype) * ups
+    out = jnp.einsum("ecf,efd->ecd", act, w_down).reshape(E * cap, D)
+    out = jnp.concatenate([out, jnp.zeros((1, D), out.dtype)], 0)
+    y_slots = out[dest] * (keep * gate.reshape(-1))[:, None].astype(x.dtype)
+    y = y_slots.reshape(T, top_k, D).sum(axis=1)
+    return y.reshape(B, S, D), aux
+
+
+# ----------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ----------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K).
+    With ``state`` (B, K-1, C): decode mode (S small), returns new state."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    if state is not None:
+        xin = jnp.concatenate([state, x], axis=1)  # (B, K-1+S, C)
+        new_state = xin[:, -(K - 1):, :]
+    else:
+        xin = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = xin[:, -(K - 1):, :]
+    out = jax.lax.conv_general_dilated(
+        xin.astype(F32),
+        w.T[:, None, :].astype(F32),  # (K, 1, C) -> spec below
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C,
+    )
+    return out.astype(x.dtype), new_state
+
+
+def mamba2_mix(
+    x: jax.Array,  # (B, S, D)
+    p: dict,
+    *,
+    d_state: int,
+    head_dim: int,
+    expand: int,
+    chunk: int = 64,
+    ssm_state=None,  # (B, nheads, d_state, head_dim) decode carry
+    conv_state=None,  # ((B,K-1,d_inner), (B,K-1,2N)) decode carry
+):
+    """Mamba-2 mixer (SSD).  Returns (y, (ssm_state, conv_state)).
+
+    Sharding-aware layout (§Perf iteration 2): the head axis stays
+    explicit end-to-end (never merged with batch — merged dims with mixed
+    shardings force SPMD full-reshards), projections are separate params
+    (no slicing of a tp-sharded axis), and B/C are computed once per
+    (batch, chunk) — they are head-free in the ngroups=1 SSD."""
+    B, S, D = x.shape
+    d_inner = expand * D
+    nheads = d_inner // head_dim
+    z = jnp.einsum("bsd,dp->bsp", x, p["w_z"])  # (B,S,d_inner) [tp]
+    xs = jnp.einsum("bsd,dp->bsp", x, p["w_x"])  # (B,S,d_inner) [tp]
+    bc = jnp.einsum("bsd,dn->bsn", x, p["w_bc"])  # (B,S,2N)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["w_dt"])  # (B,S,H) [tp on H]
+
+    cs_x = conv_state[0] if conv_state is not None else None
+    cs_bc = conv_state[1] if conv_state is not None else None
+    xs, new_cs_x = causal_conv1d(xs, p["conv_x"], cs_x)
+    bc, new_cs_bc = causal_conv1d(bc, p["conv_bc"], cs_bc)
+    xs = jax.nn.silu(xs.astype(F32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(F32))
+    b_mat = bc[..., :d_state]  # (B,S,N) head-free
+    c_mat = bc[..., d_state:]  # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    a = -jnp.exp(p["a_log"].astype(F32))  # (H,)
+    log_decay = dt * a[None, None, :]  # (B,S,H)
+
+    xh = xs.reshape(B, S, nheads, head_dim)  # head axis explicit [tp]
+    if ssm_state is not None and S == 1:
+        # decode fast path: one recurrence step, pure einsums
+        h = ssm_state.astype(F32)  # (B,H,N,D)
+        decay = jnp.exp(log_decay[:, 0])  # (B,H)
+        xdt = xh[:, 0].astype(F32) * dt[:, 0][..., None]  # (B,H,Dh)
+        h = decay[..., None, None] * h + jnp.einsum(
+            "bn,bhd->bhnd", b_mat[:, 0], xdt
+        )
+        y = jnp.einsum("bn,bhnd->bhd", c_mat[:, 0], h)  # (B,H,Dh)
+        y = y[:, None].reshape(B, 1, nheads, head_dim)
+        new_state = h
+    elif S % chunk == 0:
+        y, new_state = _ssd_chunked_jnp(
+            xh, dt, log_decay, b_mat, c_mat, chunk, ssm_state
+        )
+    else:
+        y, new_state = _ssd_seq_jnp(
+            xh, dt, log_decay, b_mat, c_mat, ssm_state
+        )
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(F32)).astype(x.dtype), p["norm"])
+    out = jnp.einsum("bsp,pd->bsd", y, p["w_out"])
+    return out, (new_state, (new_cs_x, new_cs_bc))
+
+
+def _ssd_chunked_jnp(xh, dt, a, b, c, chunk: int, state0=None):
+    """Chunked SSD in plain jnp with an explicit head axis — same algorithm
+    as the Pallas kernel (kernels/mamba2_ssd.py), which replaces the
+    intra-chunk part on TPU.
+
+    xh: (B,S,H,Dh); dt/a: (B,S,H); b/c: (B,S,N) head-free (ngroups=1).
+    Returns (y (B,S,H,Dh) f32, state (B,H,N,Dh) f32).
+    """
+    B, T, H, Dh = xh.shape
+    N = b.shape[-1]
+    C = T // chunk
+    xr = xh.reshape(B, C, chunk, H, Dh).astype(F32)
+    dtr = dt.reshape(B, C, chunk, H).astype(F32)
+    ar = a.reshape(B, C, chunk, H).astype(F32)
+    br = b.reshape(B, C, chunk, N).astype(F32)
+    cr = c.reshape(B, C, chunk, N).astype(F32)
+    cum_a = jnp.cumsum(ar, axis=2)  # (B,C,L,H)
+    ii = jnp.arange(chunk)
+    li = (ii[:, None] >= ii[None, :]).astype(F32)  # (L,M)
+    lmat = jnp.exp(
+        cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]
+    ) * li[None, None, :, :, None]  # (B,C,L,M,H)
+    scores = jnp.einsum("bcls,bcms->bclm", cr, br)  # head-free (B,C,L,M)
+    xdt = xr * dtr[..., None]  # (B,C,L,H,Dh)
+    y_intra = jnp.einsum(
+        "bclm,bclmh,bcmhd->bclhd", scores, lmat, xdt
+    )
+    decay_end = jnp.exp(cum_a[:, :, -1:, :] - cum_a)  # (B,C,L,H)
+    states = jnp.einsum("bcls,bclh,bclhd->bchsd", br, decay_end, xdt)
+    chunk_decay = jnp.exp(cum_a[:, :, -1])  # (B,C,H)
+    h0 = (
+        jnp.zeros((B, H, N, Dh), F32) if state0 is None
+        else state0.astype(F32)
+    )
+
+    def step(h, inp):
+        st_c, dec_c = inp  # (B,H,N,Dh), (B,H)
+        return dec_c[..., None, None] * h + st_c, h
+
+    h_final, h_ins = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    h_ins = jnp.moveaxis(h_ins, 0, 1)  # (B,C,H,N,Dh) state entering chunk
+    y_cross = jnp.einsum(
+        "bcls,bchsd,bclh->bclhd", cr, h_ins, jnp.exp(cum_a)
+    )
+    y = (y_intra + y_cross).reshape(B, T, H, Dh)
+    return y, h_final
+
+
+def _ssd_seq_jnp(xh, dt, a, b, c, state0=None):
+    """Sequential (exact) SSD with explicit head axis, for ragged lengths."""
+    B, T, H, Dh = xh.shape
+    N = b.shape[-1]
+    h0 = (
+        jnp.zeros((B, H, N, Dh), F32) if state0 is None
+        else state0.astype(F32)
+    )
+
+    def step(h, inp):
+        x_t, dt_t, a_t, b_t, c_t = inp
+        xdt = x_t.astype(F32) * dt_t[..., None]  # (B,H,Dh)
+        h = jnp.exp(a_t)[..., None, None] * h + jnp.einsum(
+            "bn,bhd->bhnd", b_t, xdt
+        )
+        y = jnp.einsum("bn,bhnd->bhd", c_t, h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xh.astype(F32), 1, 0),
+        jnp.moveaxis(dt.astype(F32), 1, 0),
+        jnp.moveaxis(a.astype(F32), 1, 0),
+        jnp.moveaxis(b.astype(F32), 1, 0),
+        jnp.moveaxis(c.astype(F32), 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

@@ -1,0 +1,342 @@
+"""Generic decoder-only LM covering the dense / MoE / VLM families.
+
+Layer stacks are ``lax.scan``-ed over stacked parameters (compile time and
+HLO size are O(1) in depth — required for the 126-layer dry-run) with a
+rematerialization policy on the layer body.  MoE models split the stack
+into a dense prefix (``first_k_dense``) and a scanned MoE remainder.
+
+Batch conventions:
+  train:   {"tokens" (B,S) | "embeds" (B,S,D), "labels" (B,S),
+            ["positions" (3,B,S) for M-RoPE]}
+  prefill: {"tokens" | "embeds"} → (cache, last-position logits)
+  decode:  (cache, tokens (B,1), pos ()) → (logits (B,V), cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParamDef
+from . import layers as L
+
+F32 = jnp.float32
+
+
+def _attn_defs(cfg: ArchConfig, n: int) -> dict:
+    D, H, KV, hd = (
+        cfg.d_model,
+        cfg.num_heads,
+        cfg.num_kv_heads,
+        cfg.resolved_head_dim,
+    )
+    d = {
+        "wq": ParamDef((n, D, H, hd), (None, "fsdp", "tp", None)),
+        "wk": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+        "wv": ParamDef((n, D, KV, hd), (None, "fsdp", "tp", None)),
+        "wo": ParamDef((n, H, hd, D), (None, "tp", None, "fsdp")),
+        "ln_attn": ParamDef((n, D), (None, None), init="ones"),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((n, hd), (None, None), init="ones")
+        d["k_norm"] = ParamDef((n, hd), (None, None), init="ones")
+    return d
+
+
+def _mlp_defs(cfg: ArchConfig, n: int, d_ff: int) -> dict:
+    D = cfg.d_model
+    return {
+        "w_gate": ParamDef((n, D, d_ff), (None, "fsdp", "tp")),
+        "w_up": ParamDef((n, D, d_ff), (None, "fsdp", "tp")),
+        "w_down": ParamDef((n, d_ff, D), (None, "tp", "fsdp")),
+        "ln_mlp": ParamDef((n, D), (None, None), init="ones"),
+    }
+
+
+def _moe_defs(cfg: ArchConfig, n: int) -> dict:
+    D, E, Fm = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    d = {
+        "router": ParamDef((n, D, E), (None, "fsdp", None), scale=0.02),
+        "e_gate": ParamDef((n, E, D, Fm), (None, "ep", "fsdp", None)),
+        "e_up": ParamDef((n, E, D, Fm), (None, "ep", "fsdp", None)),
+        "e_down": ParamDef((n, E, Fm, D), (None, "ep", None, "fsdp")),
+        "ln_mlp": ParamDef((n, D), (None, None), init="ones"),
+    }
+    if cfg.num_shared_experts:
+        Fs = (cfg.moe_d_ff or cfg.d_ff) * cfg.num_shared_experts
+        d["s_gate"] = ParamDef((n, D, Fs), (None, "fsdp", "tp"))
+        d["s_up"] = ParamDef((n, D, Fs), (None, "fsdp", "tp"))
+        d["s_down"] = ParamDef((n, Fs, D), (None, "tp", "fsdp"))
+    return d
+
+
+class DecoderLM:
+    """Dense / MoE / VLM decoder-only transformer."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -------------------------------------------------------------- params
+    def param_defs(self):
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab_size
+        n_dense = (
+            cfg.first_k_dense if cfg.num_experts else cfg.num_layers
+        )
+        n_moe = cfg.num_layers - n_dense if cfg.num_experts else 0
+        defs: dict[str, Any] = {
+            "embed": ParamDef((V, D), ("tp", "fsdp"), scale=0.02),
+            "final_norm": ParamDef((D,), (None,), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef((D, V), ("fsdp", "tp"), scale=0.02)
+        if n_dense:
+            defs["dense_layers"] = {
+                **_attn_defs(cfg, n_dense),
+                **_mlp_defs(cfg, n_dense, cfg.d_ff),
+            }
+        if n_moe:
+            defs["moe_layers"] = {
+                **_attn_defs(cfg, n_moe),
+                **_moe_defs(cfg, n_moe),
+            }
+        return defs
+
+    # ------------------------------------------------------------ blocks
+    def _attention(self, p, h, positions, cache=None, pos=None,
+                   mrope_positions=None):
+        cfg = self.cfg
+        B, S, D = h.shape
+        hd = cfg.resolved_head_dim
+        x = L.rms_norm(h, p["ln_attn"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if cfg.qk_norm:
+            q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if cfg.mrope and mrope_positions is not None:
+            q = L.apply_mrope(q, mrope_positions, cfg.rope_theta)
+            k = L.apply_mrope(k, mrope_positions, cfg.rope_theta)
+        else:
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+        if cache is None:
+            o = L.blockwise_attention(q, k, v, causal=True, window=cfg.window)
+            new_cache = (k, v)
+        else:
+            k_cache, v_cache = cache
+            eff = k_cache.shape[1]
+            slot = pos % eff  # ring buffer when windowed (eff < max_len)
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, 1)
+            o = L.decode_attention(
+                q, k_cache, v_cache, jnp.minimum(pos + 1, eff)
+            )
+            new_cache = (k_cache, v_cache)
+        out = jnp.einsum("bshk,hkd->bsd", o.astype(h.dtype), p["wo"])
+        return h + out, new_cache
+
+    def _mlp(self, p, h, moe: bool):
+        cfg = self.cfg
+        x = L.rms_norm(h, p["ln_mlp"], cfg.norm_eps)
+        aux = jnp.zeros((), F32)
+        if not moe:
+            y = L.swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+        else:
+            y, aux = L.moe_layer(
+                x, p["router"], p["e_gate"], p["e_up"], p["e_down"],
+                top_k=cfg.experts_per_token,
+            )
+            if cfg.num_shared_experts:
+                y = y + L.swiglu(x, p["s_gate"], p["s_up"], p["s_down"])
+        return h + y, aux
+
+    def _layer(self, p, h, positions, moe, cache=None, pos=None,
+               mrope_positions=None):
+        h, new_cache = self._attention(
+            p, h, positions, cache, pos, mrope_positions
+        )
+        h, aux = self._mlp(p, h, moe)
+        return h, aux, new_cache
+
+    # ----------------------------------------------------------- forward
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if "embeds" in batch:
+            h = batch["embeds"].astype(jnp.bfloat16)
+        else:
+            h = params["embed"][batch["tokens"]]
+        B, S = h.shape[0], h.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        return h, positions
+
+    def _stack(self, params, key, h, positions, moe, mrope_positions):
+        """scan a layer stack over stacked params (training path)."""
+        if key not in params:
+            return h, jnp.zeros((), F32)
+
+        def body(carry, lp):
+            hh, aux = carry
+            hh, a, _ = self._layer(
+                lp, hh, positions, moe, mrope_positions=mrope_positions
+            )
+            return (hh, aux + a), None
+
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+        (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), F32)), params[key])
+        return h, aux
+
+    def hidden_states(self, params, batch):
+        """Final-layer hidden states (B, S, D) + moe aux loss."""
+        h, positions = self._embed(params, batch)
+        mrope_positions = batch.get("positions") if self.cfg.mrope else None
+        h, _ = self._stack(
+            params, "dense_layers", h, positions, False, mrope_positions
+        )
+        h, aux = self._stack(
+            params, "moe_layers", h, positions, True, mrope_positions
+        )
+        return L.rms_norm(h, params["final_norm"], self.cfg.norm_eps), aux
+
+    def head_weights(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def loss(self, params, batch):
+        from .losses import chunked_cross_entropy
+
+        h, aux = self.hidden_states(params, batch)
+        loss = chunked_cross_entropy(h, self.head_weights(params),
+                                     batch["labels"])
+        return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def cache_spec(self, batch_size: int, max_len: int):
+        """(shape, dtype, logical spec) tree for the KV cache."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        eff = min(cfg.window, max_len) if cfg.window else max_len
+        def kv(n):
+            return (
+                jax.ShapeDtypeStruct(
+                    (n, batch_size, eff, cfg.num_kv_heads, hd), jnp.bfloat16
+                ),
+                ("layer", "dp", "sp", None, None),
+            )
+        n_dense = (
+            cfg.first_k_dense if cfg.num_experts else cfg.num_layers
+        )
+        n_moe = cfg.num_layers - n_dense if cfg.num_experts else 0
+        spec = {}
+        if n_dense:
+            spec["dense"] = {"k": kv(n_dense), "v": kv(n_dense)}
+        if n_moe:
+            spec["moe"] = {"k": kv(n_moe), "v": kv(n_moe)}
+        return spec
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            jax.tree.map(
+                lambda t: t[0], self.cache_spec(batch_size, max_len),
+                is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                and isinstance(x[0], jax.ShapeDtypeStruct),
+            ),
+        )
+
+    def _stack_decode(self, params, key, h, positions, moe, cache_k,
+                      cache_v, pos, mrope_positions):
+        if key not in params:
+            return h, cache_k, cache_v
+
+        def body(carry, xs):
+            hh = carry
+            lp, ck, cv = xs
+            hh, _, (nck, ncv) = self._layer(
+                lp, hh, positions, moe, cache=(ck, cv), pos=pos,
+                mrope_positions=mrope_positions,
+            )
+            return hh, (nck, ncv)
+
+        h, (ck, cv) = jax.lax.scan(
+            body, h, (params[key], cache_k, cache_v)
+        )
+        return h, ck, cv
+
+    def decode_step(self, params, cache, tokens, pos, mrope_positions=None):
+        """tokens: (B, 1); pos: () int32 — returns (logits (B,V), cache)."""
+        cfg = self.cfg
+        h = params["embed"][tokens]
+        B = tokens.shape[0]
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+        new_cache = dict(cache)
+        if "dense" in cache:
+            h, ck, cv = self._stack_decode(
+                params, "dense_layers", h, positions, False,
+                cache["dense"]["k"], cache["dense"]["v"], pos,
+                mrope_positions,
+            )
+            new_cache["dense"] = {"k": ck, "v": cv}
+        if "moe" in cache:
+            h, ck, cv = self._stack_decode(
+                params, "moe_layers", h, positions, True,
+                cache["moe"]["k"], cache["moe"]["v"], pos, mrope_positions,
+            )
+            new_cache["moe"] = {"k": ck, "v": cv}
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", h, self.head_weights(params))
+        return logits[:, 0].astype(F32), new_cache
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        """Run the prompt, returning (cache, last-position logits)."""
+        cfg = self.cfg
+        h, positions = self._embed(params, batch)
+        B, S = positions.shape
+        max_len = max_len or S
+        eff = min(cfg.window, max_len) if cfg.window else max_len
+        mrope_positions = batch.get("positions") if cfg.mrope else None
+        new_cache = {}
+
+        def fit(k):
+            """Right-size a (B, S, …) cache to ``eff`` slots: keep the last
+            ``eff`` (ring window) or right-pad so decode can append."""
+            k = k[:, -eff:]
+            pad = eff - k.shape[1]
+            if pad > 0:
+                k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+            return k
+
+        def run(key, moe, h):
+            if key not in params:
+                return h, None
+
+            def body(hh, lp):
+                hh, _, (k, v) = self._layer(
+                    lp, hh, positions, moe, mrope_positions=mrope_positions
+                )
+                return hh, (fit(k), fit(v))
+
+            h, (ks, vs) = jax.lax.scan(body, h, params[key])
+            return h, {"k": ks, "v": vs}
+
+        h, dense_cache = run("dense_layers", False, h)
+        h, moe_cache = run("moe_layers", True, h)
+        if dense_cache is not None:
+            new_cache["dense"] = dense_cache
+        if moe_cache is not None:
+            new_cache["moe"] = moe_cache
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum(
+            "bd,dv->bv", h[:, -1], self.head_weights(params)
+        )
+        return new_cache, logits.astype(F32)

@@ -1,0 +1,46 @@
+"""Losses — chunked vocabulary cross-entropy.
+
+The full logits tensor (B·S·V) for the fleet's 100k+ vocabs at 4k sequence
+would be hundreds of GB; we scan over sequence chunks, computing each
+chunk's logits + logsumexp under remat so the backward pass recomputes
+them (the lifetime of the logits tensor is exactly one chunk step — the
+same lifetime argument the paper makes for slicing overhead)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def chunked_cross_entropy(
+    hidden: jax.Array,  # (B, S, D)
+    head_w: jax.Array,  # (D, V)
+    labels: jax.Array,  # (B, S) int32
+    chunk: int = 512,
+) -> jax.Array:
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    hs = hidden.reshape(B, n, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_loss(h_c, l_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, head_w).astype(F32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, l_c[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        return jnp.sum(lse - gold)
+
+    def body(acc, xs):
+        h_c, l_c = xs
+        return acc + chunk_loss(h_c, l_c), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), F32), (hs, ls))
+    return total / (B * S)

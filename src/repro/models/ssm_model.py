@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD) language model — attention-free, O(1)-state decode."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..parallel.sharding import ParamDef
+from . import layers as L
+
+F32 = jnp.float32
+
+
+def mamba_defs(cfg: ArchConfig, n: int) -> dict:
+    """Split projections (no slicing of a tp-sharded fused axis — §Perf
+    iteration 2) with the head axis tp-sharded end-to-end."""
+    D = cfg.d_model
+    d_inner = cfg.ssm_expand * D
+    nheads = d_inner // cfg.ssm_head_dim
+    N2 = 2 * cfg.ssm_state
+    return {
+        "w_z": ParamDef((n, D, d_inner), (None, "fsdp", "tp")),
+        "w_x": ParamDef((n, D, d_inner), (None, "fsdp", "tp")),
+        "w_bc": ParamDef((n, D, N2), (None, "fsdp", "tp")),
+        "w_dt": ParamDef((n, D, nheads), (None, "fsdp", "tp")),
+        "conv_x": ParamDef((n, d_inner, cfg.ssm_conv), (None, "tp", None),
+                           scale=0.5),
+        "conv_bc": ParamDef((n, N2, cfg.ssm_conv), (None, "tp", None),
+                            scale=0.5),
+        "dt_bias": ParamDef((n, nheads), (None, "tp"), init="zeros"),
+        "a_log": ParamDef((n, nheads), (None, "tp"), init="zeros"),
+        "norm": ParamDef((n, d_inner), (None, "tp"), init="ones"),
+        "w_out": ParamDef((n, d_inner, D), (None, "tp", "fsdp")),
+        "ln": ParamDef((n, D), (None, None), init="ones"),
+    }
+
+
+class MambaLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def param_defs(self):
+        cfg = self.cfg
+        defs: dict[str, Any] = {
+            "embed": ParamDef(
+                (cfg.vocab_size, cfg.d_model), ("tp", "fsdp"), scale=0.02
+            ),
+            "final_norm": ParamDef((cfg.d_model,), (None,), init="ones"),
+            "layers": mamba_defs(cfg, cfg.num_layers),
+        }
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef(
+                (cfg.d_model, cfg.vocab_size), ("fsdp", "tp"), scale=0.02
+            )
+        return defs
+
+    def _mix(self, lp, h, ssm_state=None, conv_state=None):
+        cfg = self.cfg
+        x = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, (s2, c2) = L.mamba2_mix(
+            x,
+            lp,
+            d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand,
+            ssm_state=ssm_state,
+            conv_state=conv_state,
+        )
+        return h + y, s2, c2
+
+    def hidden_states(self, params, batch):
+        h = params["embed"][batch["tokens"]]
+
+        def body(hh, lp):
+            hh, _, _ = self._mix(lp, hh)
+            return hh, None
+
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        )
+        h, _ = jax.lax.scan(body, h, params["layers"])
+        return L.rms_norm(h, params["final_norm"], self.cfg.norm_eps), jnp.zeros((), F32)
+
+    def head_weights(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["head"]
+
+    def loss(self, params, batch):
+        from .losses import chunked_cross_entropy
+
+        h, aux = self.hidden_states(params, batch)
+        loss = chunked_cross_entropy(h, self.head_weights(params), batch["labels"])
+        return loss, {"xent": loss, "aux": aux}
+
+    # ------------------------------------------------------------- serve
+    def cache_spec(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        n = cfg.num_layers
+        return {
+            "ssm": (
+                jax.ShapeDtypeStruct(
+                    (n, batch_size, nheads, cfg.ssm_state, cfg.ssm_head_dim),
+                    F32,
+                ),
+                ("layer", "dp", "tp", None, None),
+            ),
+            "conv_x": (
+                jax.ShapeDtypeStruct(
+                    (n, batch_size, cfg.ssm_conv - 1, d_inner), jnp.bfloat16
+                ),
+                ("layer", "dp", None, "tp"),
+            ),
+            "conv_bc": (
+                jax.ShapeDtypeStruct(
+                    (n, batch_size, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                    jnp.bfloat16,
+                ),
+                ("layer", "dp", None, "tp"),
+            ),
+        }
+
+    def init_cache(self, batch_size: int, max_len: int):
+        return jax.tree.map(
+            lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+            self.cache_spec(batch_size, max_len),
+            is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+        )
+
+    def decode_step(self, params, cache, tokens, pos, mrope_positions=None):
+        h = params["embed"][tokens]  # (B, 1, D)
+
+        def body(hh, xs):
+            lp, s, cx, cbc = xs
+            hh, s2, (cx2, cbc2) = self._mix(
+                lp, hh, ssm_state=s, conv_state=(cx, cbc)
+            )
+            return hh, (s2, cx2.astype(jnp.bfloat16),
+                        cbc2.astype(jnp.bfloat16))
+
+        h, (s_new, cx_new, cbc_new) = jax.lax.scan(
+            body, h,
+            (params["layers"], cache["ssm"], cache["conv_x"],
+             cache["conv_bc"]),
+        )
+        h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, 0], self.head_weights(params))
+        return logits.astype(F32), {
+            "ssm": s_new, "conv_x": cx_new, "conv_bc": cbc_new,
+        }
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        h = params["embed"][batch["tokens"]]
+
+        def body(hh, lp):
+            hh, s2, (cx2, cbc2) = self._mix(lp, hh)
+            return hh, (s2, cx2.astype(jnp.bfloat16),
+                        cbc2.astype(jnp.bfloat16))
+
+        h, (s_new, cx_new, cbc_new) = jax.lax.scan(body, h, params["layers"])
+        h = L.rms_norm(h, params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], self.head_weights(params))
+        return {
+            "ssm": s_new, "conv_x": cx_new, "conv_bc": cbc_new,
+        }, logits.astype(F32)

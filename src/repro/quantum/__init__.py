@@ -1,0 +1,1 @@
+from . import circuits, gates, statevector, xeb  # noqa: F401

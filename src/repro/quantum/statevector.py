@@ -1,0 +1,39 @@
+"""Dense statevector simulator — correctness oracle for the contraction
+executor (feasible to ~20 qubits)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .circuits import Circuit
+
+
+def simulate(circuit: Circuit) -> jnp.ndarray:
+    """Full statevector of ``circuit`` applied to |0…0>, shape (2,)*n."""
+    n = circuit.num_qubits
+    psi = jnp.zeros((2,) * n, dtype=jnp.complex64)
+    psi = psi.at[(0,) * n].set(1.0)
+    for op in circuit.ops:
+        arr = jnp.asarray(op.array())
+        if len(op.qubits) == 1:
+            (q,) = op.qubits
+            psi = jnp.tensordot(arr, psi, axes=[[1], [q]])
+            psi = jnp.moveaxis(psi, 0, q)
+        else:
+            a, b = op.qubits
+            g = arr.reshape(2, 2, 2, 2)  # (a_out, b_out, a_in, b_in)
+            psi = jnp.tensordot(g, psi, axes=[[2, 3], [a, b]])
+            psi = jnp.moveaxis(psi, (0, 1), (a, b))
+    return psi
+
+
+def amplitude(circuit: Circuit, bitstring: str) -> complex:
+    psi = simulate(circuit)
+    idx = tuple(int(b) for b in bitstring)
+    return complex(psi[idx])
+
+
+def probabilities(circuit: Circuit) -> np.ndarray:
+    psi = np.asarray(simulate(circuit)).reshape(-1)
+    return np.abs(psi) ** 2

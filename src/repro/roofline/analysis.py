@@ -1,0 +1,155 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute_s    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory_s     = HLO_bytes_per_device / HBM_bw
+    collective_s = collective_bytes_per_device / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device — the SPMD
+module is the per-chip program).  Collective bytes are not in
+cost_analysis: we parse the optimized HLO text and sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather-start", "all-gather",
+    "all-reduce-start", "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute-start", "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[a-z]+\d+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:(?:pred|[a-z]+\d+)\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")\("
+)
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Result-shape bytes per collective kind (…-start/done pairs counted
+    once via the -start form; bare ops counted directly)."""
+    out: dict[str, int] = {}
+    seen_start_ids: set[str] = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_txt, kind = m.groups()
+        base = kind.replace("-start", "")
+        if kind.endswith("-start"):
+            pass  # counted here; the matching -done has no '=shape op(' form
+        elif f"{base}-start" in line:
+            continue
+        out[base] = out.get(base, 0) + shape_bytes(shape_txt)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    coll_bytes: dict[str, int]  # per device
+    n_devices: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.coll_bytes.values()) / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "collective_bytes_per_device": dict(self.coll_bytes),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def analyze_compiled(compiled, n_devices: int) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    return Roofline(flops, bytes_accessed, coll, n_devices)
+
+
+def model_flops(cfg, shape, active_params: int) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference forward."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * active_params * tokens
+
+
+def active_param_count(cfg, defs_count: int) -> int:
+    """Active params per token for MoE archs (routed experts count only
+    k/E of their weights); dense archs: all params."""
+    if not cfg.num_experts:
+        return defs_count
+    # approximate: routed expert params scale by k/E
+    Fm = cfg.moe_d_ff or cfg.d_ff
+    n_moe = cfg.num_layers - cfg.first_k_dense
+    routed = n_moe * cfg.num_experts * 3 * cfg.d_model * Fm
+    active_routed = routed * cfg.experts_per_token / cfg.num_experts
+    return int(defs_count - routed + active_routed)

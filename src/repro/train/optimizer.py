@@ -1,0 +1,169 @@
+"""AdamW with warmup+cosine schedule, decoupled weight decay, global-norm
+clipping, and optional int8-quantized moments (8-bit-Adam-style) so the
+405B optimizer state fits v5e HBM.
+
+Hand-rolled (no optax in this environment) but with the production
+surface: ``init / update`` pure functions over pytrees, fp32 master
+moments, decay masking for 1-D params (norms, biases).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"  # float32 | int8
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+    frac = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * frac
+
+
+def _decayable(path: tuple, leaf: jax.Array) -> bool:
+    return leaf.ndim >= 2
+
+
+# --------------------------------------------------------------------
+# int8 moment quantization (per-tensor absmax scaling + fp32 scale)
+# --------------------------------------------------------------------
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(F32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(F32) * scale
+
+
+def init(cfg: OptimizerConfig, params) -> dict:
+    if cfg.moment_dtype == "int8":
+        zeros_q = jax.tree.map(
+            lambda p: (jnp.zeros(p.shape, jnp.int8), jnp.zeros((), F32)),
+            params,
+        )
+        return {
+            "m": zeros_q,
+            "v": jax.tree.map(
+                lambda p: (jnp.zeros(p.shape, jnp.int8), jnp.zeros((), F32)),
+                params,
+            ),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    z = lambda p: jnp.zeros(p.shape, F32)
+    return {
+        "m": jax.tree.map(z, params),
+        "v": jax.tree.map(z, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves)
+    )
+
+
+def update(
+    cfg: OptimizerConfig, grads, state: dict, params
+) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, count)
+    int8 = cfg.moment_dtype == "int8"
+
+    bc1 = 1.0 - cfg.b1 ** count.astype(F32)
+    bc2 = 1.0 - cfg.b2 ** count.astype(F32)
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    is_q = lambda x: isinstance(x, tuple) and len(x) == 2
+    flat_m = jax.tree.leaves(state["m"], is_leaf=is_q) if int8 else jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"], is_leaf=is_q) if int8 else jax.tree.leaves(state["v"])
+    paths = [
+        p for p, _ in jax.tree_util.tree_flatten_with_path(grads)[0]
+    ]
+
+    new_p, new_m, new_v = [], [], []
+    for path, g, p, m, v in zip(paths, flat_g, flat_p, flat_m, flat_v):
+        g = g.astype(F32) * clip
+        m_f = _dequantize(*m) if int8 else m
+        v_f = _dequantize(*v) if int8 else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * g * g
+        upd = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        if cfg.weight_decay and _decayable(path, p):
+            upd = upd + cfg.weight_decay * p.astype(F32)
+        new_p.append((p.astype(F32) - lr * upd).astype(p.dtype))
+        new_m.append(_quantize(m_f) if int8 else m_f)
+        new_v.append(_quantize(v_f) if int8 else v_f)
+
+    params2 = jax.tree.unflatten(tdef, new_p)
+    state2 = {
+        "m": jax.tree.unflatten(tdef, new_m),
+        "v": jax.tree.unflatten(tdef, new_v),
+        "count": count,
+    }
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params2, state2, metrics
+
+
+def opt_state_logical(defs, cfg: OptimizerConfig):
+    """Logical sharding tree for the optimizer state (moments shard exactly
+    like their parameters — ZeRO-3)."""
+    from ..parallel.sharding import ParamDef, is_def
+
+    if cfg.moment_dtype == "int8":
+        mom = jax.tree.map(
+            lambda d: (d.logical, ()), defs, is_leaf=is_def
+        )
+    else:
+        mom = jax.tree.map(lambda d: d.logical, defs, is_leaf=is_def)
+    return {"m": mom, "v": mom, "count": ()}
+
+
+def opt_state_abstract(defs, cfg: OptimizerConfig):
+    from ..parallel.sharding import is_def
+
+    if cfg.moment_dtype == "int8":
+        mom = lambda d: (
+            jax.ShapeDtypeStruct(d.shape, jnp.int8),
+            jax.ShapeDtypeStruct((), F32),
+        )
+    else:
+        mom = lambda d: jax.ShapeDtypeStruct(d.shape, F32)
+    return {
+        "m": jax.tree.map(mom, defs, is_leaf=is_def),
+        "v": jax.tree.map(mom, defs, is_leaf=is_def),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,88 @@
+"""Train / serve step builders shared by the launcher and the dry-run.
+
+``make_train_step(model, opt_cfg)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for jit with explicit
+shardings; ``abstract_state``/``state_logical`` provide the matching
+ShapeDtypeStruct / logical-sharding trees so the dry-run can lower the
+exact production program without allocating anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import ParamDef, abstract_params, is_def, param_specs
+from . import optimizer as opt
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array
+
+
+def make_train_step(model, opt_cfg: opt.OptimizerConfig) -> Callable:
+    def train_step(state: TrainState, batch):
+        def loss_fn(params):
+            loss, metrics = model.loss(params, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params
+        )
+        params2, opt2, opt_metrics = opt.update(
+            opt_cfg, grads, state.opt, state.params
+        )
+        new_state = TrainState(params2, opt2, state.step + 1)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return new_state, out_metrics
+
+    return train_step
+
+
+def init_state(model, opt_cfg: opt.OptimizerConfig, key) -> TrainState:
+    from ..parallel.sharding import init_params
+
+    params = init_params(model.param_defs(), key)
+    return TrainState(params, opt.init(opt_cfg, params), jnp.zeros((), jnp.int32))
+
+
+def abstract_state(model, opt_cfg: opt.OptimizerConfig) -> TrainState:
+    defs = model.param_defs()
+    return TrainState(
+        abstract_params(defs),
+        opt.opt_state_abstract(defs, opt_cfg),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def state_logical(model, opt_cfg: opt.OptimizerConfig) -> TrainState:
+    defs = model.param_defs()
+    return TrainState(
+        param_specs(defs),
+        opt.opt_state_logical(defs, opt_cfg),
+        (),
+    )
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model) -> Callable:
+    def decode_step(params, cache, tokens, pos, mrope_positions=None):
+        return model.decode_step(params, cache, tokens, pos, mrope_positions)
+
+    return decode_step

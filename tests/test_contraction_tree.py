@@ -1,0 +1,97 @@
+"""Contraction-tree cost algebra (Eqs. 2/3/4/6) and tree surgery."""
+
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from conftest import random_closed_network, random_tree
+from repro.core.contraction_tree import (
+    ContractionTree,
+    linear_to_ssa,
+    ssa_to_linear,
+)
+from repro.core.lifetime import detect_stem
+from repro.core.tensor_network import popcount
+
+
+@given(n=st.integers(5, 20), seed=st.integers(0, 9999))
+def test_tree_structure_valid(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    tree.check_valid()
+    assert len(tree.children) == tn.num_tensors - 1
+
+
+@given(n=st.integers(5, 16), seed=st.integers(0, 9999))
+def test_eq6_reduces_to_eq3_when_unsliced(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    assert math.isclose(tree.sliced_cost(0), tree.total_cost())
+    assert math.isclose(tree.slicing_overhead(0), 1.0)
+
+
+@given(n=st.integers(6, 16), seed=st.integers(0, 9999), k=st.integers(0, 5))
+def test_eq6_brute_force(n, seed, k):
+    """Eq. 6 equals brute-force: simulate every slice assignment by
+    removing sliced bits and summing 2^|s_node| over all assignments."""
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    inds = list(range(min(tn.num_inds, 8)))
+    smask = 0
+    for i in inds[:k]:
+        smask |= 1 << i
+    s = popcount(smask)
+    brute = 0.0
+    for v in tree.children:
+        nm = tree.node_mask(v)
+        kept = popcount(nm & ~smask)
+        brute += (2.0 ** s) * (2.0 ** kept)
+    assert math.isclose(tree.sliced_cost(smask), brute, rel_tol=1e-9)
+
+
+@given(n=st.integers(8, 24), seed=st.integers(0, 9999))
+def test_exchange_preserves_leaves_and_masks(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    stem = detect_stem(tree)
+    done = 0
+    for i in range(len(stem.nodes) - 1):
+        args = stem.exchange_args(i)
+        if args is None:
+            continue
+        p, q, bq, bp = args
+        if tree.parent.get(q) != p:
+            continue
+        tree.exchange_at(p, q, bq, bp)
+        tree.check_valid()
+        done += 1
+        if done >= 3:
+            break
+
+
+@given(n=st.integers(8, 24), seed=st.integers(0, 9999))
+def test_merge_preserves_leaves_and_masks(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    stem = detect_stem(tree)
+    for i in range(len(stem.nodes) - 1):
+        args = stem.exchange_args(i)
+        if args is None:
+            continue
+        p, q, bq, bp = args
+        if tree.parent.get(q) != p:
+            continue
+        tree.merge_branches_at(p, q, bq, bp)
+        tree.check_valid()
+        break
+
+
+def test_ssa_linear_roundtrip():
+    path = [(0, 1), (4, 2), (5, 3)]
+    lin = ssa_to_linear(path, 4)
+    back = linear_to_ssa(lin, 4)
+    # pair order within a contraction is not semantic
+    assert [tuple(sorted(p)) for p in back] == [
+        tuple(sorted(p)) for p in path
+    ]

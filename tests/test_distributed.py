@@ -1,0 +1,80 @@
+"""Distributed slice execution: shard_map + psum on 8 virtual devices, and
+the resumable fault-tolerance contract."""
+
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import ContractionPlan, simplify_network
+from repro.core.distributed import contract_resumable
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.quantum.circuits import circuit_to_network, random_1d_circuit
+
+SHARDED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro.quantum.circuits import random_1d_circuit, circuit_to_network
+from repro.core import simplify_network, ContractionPlan
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.core.distributed import contract_sharded
+from repro.launch.mesh import make_host_mesh
+
+c = random_1d_circuit(10, 8, seed=3)
+tn, arrays = circuit_to_network(c, bitstring="0110100101")
+tn, arrays = simplify_network(tn, arrays)
+tree = random_greedy_tree(tn, repeats=4)
+S = find_slices(tree, 4, method="lifetime")
+plan = ContractionPlan(tree, S)
+dense = ContractionPlan(tree, 0).contract_all(arrays)
+mesh = make_host_mesh((4, 2), ("data", "model"))
+v = contract_sharded(plan, arrays, mesh, axis_names=("data",))
+assert np.allclose(np.asarray(v), np.asarray(dense), atol=1e-4)
+# slice axis spanning both mesh axes (the paper's full process grid)
+v2 = contract_sharded(plan, arrays, mesh, axis_names=("data", "model"))
+assert np.allclose(np.asarray(v2), np.asarray(dense), atol=1e-4)
+print("DONE")
+"""
+
+
+def test_contract_sharded_8dev():
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
+
+
+def _plan():
+    c = random_1d_circuit(9, 6, seed=5)
+    tn, arrays = circuit_to_network(c, bitstring="011010010")
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4)
+    S = find_slices(tree, 4, method="lifetime")
+    return ContractionPlan(tree, S), arrays, tree
+
+
+def test_resumable_failure_recovery():
+    plan, arrays, tree = _plan()
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    n_slices = 1 << plan.num_sliced
+    fail_at = min(8, max(0, n_slices - 8))
+    state = None
+    try:
+        _, state = contract_resumable(plan, arrays, chunk=8,
+                                      fail_on={fail_at})
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised or n_slices <= 8
+    # restart from scratch state: completes and matches
+    val, state = contract_resumable(plan, arrays, chunk=8)
+    np.testing.assert_allclose(val, dense, atol=1e-4)
+    # idempotent: a second resume does no work and returns the same value
+    val2, _ = contract_resumable(plan, arrays, chunk=8, state=state)
+    np.testing.assert_allclose(val2, val, atol=1e-6)

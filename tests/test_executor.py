@@ -1,0 +1,92 @@
+"""Executor correctness: sliced == dense == statevector oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ContractionPlan,
+    simplify_network,
+    simulate_amplitude,
+)
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.quantum import statevector
+from repro.quantum.circuits import (
+    circuit_to_network,
+    random_1d_circuit,
+    sycamore_like,
+)
+
+
+@pytest.mark.parametrize("method", ["lifetime", "greedy", "interval"])
+def test_amplitude_matches_statevector(method):
+    c = random_1d_circuit(9, 7, seed=11)
+    bs = "011010010"
+    ref = statevector.amplitude(c, bs)
+    res = simulate_amplitude(
+        c, bs, target_dim=4, method=method, tune=(method == "lifetime")
+    )
+    assert abs(complex(res.value) - ref) < 1e-4
+    # memory bound respected
+    assert res.tree.sliced_width(res.smask) <= 4
+
+
+@given(seed=st.integers(0, 500), nq=st.integers(6, 10))
+@settings(max_examples=8)
+def test_amplitude_property(seed, nq):
+    c = random_1d_circuit(nq, 5, seed=seed)
+    rng = np.random.default_rng(seed)
+    bs = "".join(str(b) for b in rng.integers(0, 2, nq))
+    ref = statevector.amplitude(c, bs)
+    res = simulate_amplitude(c, bs, target_dim=5, seed=seed)
+    assert abs(complex(res.value) - ref) < 1e-4
+
+
+def test_sliced_equals_dense_2d_circuit():
+    circ = sycamore_like(3, 4, 8, seed=3)
+    tn, arrays = circuit_to_network(circ, bitstring="0" * 12)
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4)
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    for method in ("lifetime", "greedy"):
+        S = find_slices(tree, max(tree.width() - 3, 4), method=method)
+        v = np.asarray(ContractionPlan(tree, S).contract_all(arrays, slice_batch=4))
+        np.testing.assert_allclose(v, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_open_indices_batch_amplitudes():
+    """Open final wires → the contraction returns the full statevector."""
+    c = random_1d_circuit(6, 4, seed=2)
+    tn, arrays = circuit_to_network(c, open_final=True)
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4)
+    out = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    psi = np.asarray(statevector.simulate(c))
+    # executor output axes follow tn.open_inds order = qubit order
+    np.testing.assert_allclose(out, psi, rtol=1e-4, atol=1e-5)
+
+
+def test_sliced_open_network():
+    c = random_1d_circuit(6, 4, seed=9)
+    tn, arrays = circuit_to_network(c, open_final=True)
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4)
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    # open indices cannot be sliced: the bound cannot go below 6 here
+    S = find_slices(tree, max(tree.width() - 2, 6), method="lifetime")
+    v = np.asarray(ContractionPlan(tree, S).contract_all(arrays, slice_batch=2))
+    np.testing.assert_allclose(v, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_simplify_preserves_value():
+    c = random_1d_circuit(7, 5, seed=4)
+    bs = "0101101"
+    tn, arrays = circuit_to_network(c, bitstring=bs)
+    tree_raw = random_greedy_tree(tn, repeats=4)
+    raw = complex(np.asarray(ContractionPlan(tree_raw, 0).contract_all(arrays)))
+    tn2, arrays2 = simplify_network(tn, arrays)
+    tree2 = random_greedy_tree(tn2, repeats=4)
+    simp = complex(np.asarray(ContractionPlan(tree2, 0).contract_all(arrays2)))
+    assert abs(raw - simp) < 1e-4
+    assert tn2.num_tensors < tn.num_tensors

@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, shape/dtype sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.contract_gemm import tiled_matmul
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mamba2_ssd import ssd_intra_chunk
+
+RNG = np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ GEMM
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 384),
+                                   (384, 256, 128), (512, 512, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tiled_matmul_shapes(m, k, n, dtype):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)), dtype)
+    out = tiled_matmul(a, b, bm=128, bn=128, bk=128, interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m,k,n", [(100, 60, 130), (1, 128, 128), (37, 41, 53)])
+def test_matmul_padding_path(m, k, n):
+    a = jnp.asarray(RNG.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(k, n)), jnp.float32)
+    out = ops.matmul(a, b, min_kernel_dim=1)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_ref(a, b)), rtol=1e-5, atol=1e-4
+    )
+
+
+def test_complex_karatsuba_matmul():
+    a = RNG.normal(size=(130, 140)) + 1j * RNG.normal(size=(130, 140))
+    b = RNG.normal(size=(140, 150)) + 1j * RNG.normal(size=(140, 150))
+    a, b = jnp.asarray(a, jnp.complex64), jnp.asarray(b, jnp.complex64)
+    out = ops.matmul(a, b, min_kernel_dim=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------- attention
+@pytest.mark.parametrize("sq,sk,h,hkv,d", [
+    (256, 256, 4, 4, 64),
+    (256, 256, 8, 2, 64),   # GQA
+    (128, 512, 4, 1, 32),   # MQA decode-ish chunk with offset
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(sq, sk, h, hkv, d, causal):
+    q = jnp.asarray(RNG.normal(size=(2, sq, h, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, sk, hkv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, sk, hkv, d)), jnp.float32)
+    off = sk - sq if causal and sk > sq else 0
+    out = ops.attention(q, k, v, causal=causal, q_offset=off, bq=128, bk=128)
+    want = ops.attention(q, k, v, causal=causal, q_offset=off,
+                         use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    # kernel layout: (batch·heads, seq, head_dim)
+    q = jnp.asarray(RNG.normal(size=(16, 128, 32)), dtype)
+    k = jnp.asarray(RNG.normal(size=(16, 128, 32)), dtype)
+    v = jnp.asarray(RNG.normal(size=(16, 128, 32)), dtype)
+    out = flash_attention(q, k, v, bq=128, bk=128, causal=True,
+                          interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_blockwise_attention_matches_ref():
+    from repro.models.layers import blockwise_attention
+
+    q = jnp.asarray(RNG.normal(size=(2, 256, 4, 32)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(2, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 256, 2, 32)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = ops.attention(q, k, v, causal=True, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blockwise_attention_window():
+    from repro.models.layers import blockwise_attention
+
+    q = jnp.asarray(RNG.normal(size=(1, 256, 2, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 16)), jnp.float32)
+    out = blockwise_attention(q, k, v, causal=True, window=64, bq=64, bk=64)
+    # reference with explicit banded mask
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / 4.0
+    qp = jnp.arange(256)[:, None]
+    kp = jnp.arange(256)[None, :]
+    mask = (qp >= kp) & (kp > qp - 64)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    want = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ SSD
+@pytest.mark.parametrize("T,D,S,chunk", [(64, 16, 8, 16), (128, 32, 16, 32),
+                                         (96, 8, 4, 32)])
+def test_ssd_kernel_sweep(T, D, S, chunk):
+    BH = 3
+    x = jnp.asarray(RNG.normal(size=(BH, T, D)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 1.0, size=(BH, T)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.01, 0.5, size=(BH, T)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(BH, T, S)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(BH, T, S)), jnp.float32)
+    y, h = ops.ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    y_ref, h_ref = ref.ssd_scan_ref(x, dt, a, b, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_with_initial_state():
+    BH, T, D, S = 2, 64, 8, 4
+    x = jnp.asarray(RNG.normal(size=(BH, T, D)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 1.0, size=(BH, T)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.01, 0.5, size=(BH, T)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(BH, T, S)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(BH, T, S)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(BH, S, D)), jnp.float32)
+    y, h = ops.ssd_scan(x, dt, a, b, c, chunk=16, state0=h0, interpret=True)
+    y_ref, h_ref = ref.ssd_scan_ref(x, dt, a, b, c, state0=h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_decode_consistency():
+    """Chunked prefill then step-by-step ref decode continues the state."""
+    BH, T, D, S = 2, 32, 8, 4
+    x = jnp.asarray(RNG.normal(size=(BH, T + 4, D)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.1, 1.0, size=(BH, T + 4)), jnp.float32)
+    a = jnp.asarray(-RNG.uniform(0.01, 0.5, size=(BH, T + 4)), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(BH, T + 4, S)), jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(BH, T + 4, S)), jnp.float32)
+    y_full, h_full = ref.ssd_scan_ref(x, dt, a, b, c)
+    _, h_pre = ops.ssd_scan(x[:, :T], dt[:, :T], a[:, :T], b[:, :T],
+                            c[:, :T], chunk=16, interpret=True)
+    y_inc, h_inc = ref.ssd_scan_ref(
+        x[:, T:], dt[:, T:], a[:, T:], b[:, T:], c[:, T:], state0=h_pre
+    )
+    np.testing.assert_allclose(np.asarray(h_inc), np.asarray(h_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(y_inc), np.asarray(y_full[:, T:]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,87 @@
+"""Property tests for the paper's core theory (Defs. 1-2, Lemma 1, Thm. 1)."""
+
+import pytest
+from hypothesis import given, strategies as st
+
+from conftest import random_closed_network, random_tree
+from repro.core.lifetime import (
+    correlated_contractions,
+    detect_stem,
+    leaf_path,
+    lifetime_edges,
+)
+from repro.core.tensor_network import bits, popcount
+
+
+@given(
+    n=st.integers(6, 24),
+    deg=st.integers(3, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_theorem1_lifetime_is_leaf_path(n, deg, seed):
+    """Thm. 1: the lifetime of any index equals the set of tree edges on
+    the unique path between the two leaves owning that index."""
+    tn = random_closed_network(n, deg, seed)
+    tree = random_tree(tn, seed=seed)
+    for b in range(min(tn.num_inds, 12)):
+        owners = [i for i, m in enumerate(tn.masks) if m >> b & 1]
+        if len(owners) != 2:
+            continue
+        tensors, nodes = leaf_path(tree, owners[0], owners[1])
+        assert set(lifetime_edges(tree, b)) == set(tensors)
+        assert set(correlated_contractions(tree, b)) == set(nodes)
+
+
+@given(
+    n=st.integers(6, 24),
+    deg=st.integers(3, 4),
+    seed=st.integers(0, 10_000),
+)
+def test_conservation_lemma(n, deg, seed):
+    """Lemma 1: an index at a node appears in exactly the two contracted
+    tensors; contractions never create indices."""
+    tn = random_closed_network(n, deg, seed)
+    tree = random_tree(tn, seed=seed)
+    for v, (l, r) in tree.children.items():
+        nm = tree.node_mask(v)
+        em = tree.emask[v]
+        # result indices all came from the children
+        assert em & ~nm == 0
+
+
+@given(
+    n=st.integers(8, 30),
+    seed=st.integers(0, 10_000),
+)
+def test_stem_is_max_cost_leaf_path_and_contiguous(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed=seed)
+    stem = detect_stem(tree)
+    stem.check_contiguous()
+    # stem nodes form a connected path: consecutive tensors share a node
+    assert len(stem.nodes) == len(stem.tensors) - 1
+    # stem cost >= cost of 50 random leaf-to-leaf paths
+    import random as _r
+
+    rng = _r.Random(seed)
+    leaves = list(range(tn.num_tensors))
+    stem_cost = stem.total_cost()
+    for _ in range(20):
+        a, b = rng.sample(leaves, 2)
+        _, nodes = leaf_path(tree, a, b)
+        c = sum(2.0 ** popcount(tree.node_mask(x)) for x in nodes)
+        assert c <= stem_cost + 1e-6
+
+
+def test_lifetime_overlap_is_interval():
+    """The stem-restricted lifetime of every index is one contiguous
+    segment (intersection of two tree paths)."""
+    tn = random_closed_network(40, 3, 123)
+    tree = random_tree(tn, seed=5)
+    stem = detect_stem(tree)
+    iv = stem.index_intervals()
+    masks = stem.masks()
+    for b, (lo, hi) in iv.items():
+        for p, m in enumerate(masks):
+            inside = lo <= p <= hi
+            assert bool(m >> b & 1) == inside or not inside

@@ -1,0 +1,71 @@
+"""Contraction-order search quality + DP oracle."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_closed_network
+from repro.core.contraction_tree import ContractionTree
+from repro.core.pathfinder import (
+    dp_optimal_tree,
+    greedy_ssa_path,
+    partition_ssa_path,
+    random_greedy_tree,
+)
+
+
+@given(n=st.integers(5, 11), seed=st.integers(0, 500))
+@settings(max_examples=10)
+def test_greedy_within_factor_of_optimal(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    opt = dp_optimal_tree(tn)
+    tree = random_greedy_tree(tn, repeats=8, seed=seed)
+    # log2 gap bounded (greedy is near-optimal on tiny graphs)
+    assert tree.log2_total_cost() <= opt.log2_total_cost() + 4.0
+
+
+def test_dp_is_really_optimal_exhaustive_tiny():
+    """Cross-check DP against full enumeration on a 5-tensor network."""
+    import itertools
+
+    tn = random_closed_network(5, 3, 17)
+    opt = dp_optimal_tree(tn).total_cost()
+    best = math.inf
+    # enumerate all ssa paths
+    def rec(avail, path):
+        nonlocal best
+        if len(avail) == 1:
+            tree = ContractionTree.from_ssa_path(tn, path)
+            best = min(best, tree.total_cost())
+            return
+        for i, j in itertools.combinations(sorted(avail), 2):
+            nid = tn.num_tensors + len(path)
+            rec(avail - {i, j} | {nid}, path + [(i, j)])
+
+    rec(set(range(5)), [])
+    assert math.isclose(opt, best, rel_tol=1e-9)
+
+
+@given(n=st.integers(8, 40), seed=st.integers(0, 500))
+@settings(max_examples=10)
+def test_partition_path_valid(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    path = partition_ssa_path(tn, seed=seed)
+    tree = ContractionTree.from_ssa_path(tn, path)
+    tree.check_valid()
+
+
+def test_greedy_handles_open_indices():
+    from repro.core.tensor_network import TensorNetwork
+
+    tn = TensorNetwork(
+        [("a", "b"), ("b", "c"), ("c", "d"), ("d", "e")],
+        open_inds=("a", "e"),
+    )
+    path = greedy_ssa_path(tn)
+    tree = ContractionTree.from_ssa_path(tn, path)
+    tree.check_valid()
+    from repro.core.tensor_network import popcount
+
+    assert popcount(tree.emask[tree.root]) == 2  # both open inds survive

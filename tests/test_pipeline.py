@@ -1,0 +1,58 @@
+"""Pipeline parallelism: GPipe schedule equals sequential layer apply."""
+
+import subprocess
+import sys
+
+from repro.parallel.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(8, 2) == 1 / 9
+    assert bubble_fraction(1, 4) == 3 / 4
+
+
+PIPE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.launch.mesh import make_host_mesh
+from repro.parallel.pipeline import pipeline_forward
+
+mesh = make_host_mesh((4, 2), ("pod", "data"))
+L, D = 8, 16
+key = jax.random.PRNGKey(0)
+params = {"w": jax.random.normal(key, (L, D, D)) * 0.3,
+          "b": jax.random.normal(key, (L, D)) * 0.1}
+
+def layer_apply(lp, x):
+    return jnp.tanh(x @ lp["w"] + lp["b"])
+
+x = jax.random.normal(key, (6, 4, D))  # (n_micro, mb, D)
+
+# sequential reference
+ref = x
+for i in range(L):
+    ref = layer_apply({"w": params["w"][i], "b": params["b"][i]}, ref)
+
+out = pipeline_forward(layer_apply, params, x, mesh, axis="pod")
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                           atol=2e-4)
+
+# differentiability: GPipe backward via autodiff
+def loss(p):
+    return jnp.sum(pipeline_forward(layer_apply, p, x, mesh) ** 2)
+
+g = jax.grad(loss)(params)
+assert all(jnp.isfinite(l).all() for l in jax.tree.leaves(g))
+print("DONE")
+"""
+
+
+def test_pipeline_matches_sequential():
+    r = subprocess.run(
+        [sys.executable, "-c", PIPE],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

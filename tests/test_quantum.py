@@ -1,0 +1,72 @@
+"""Quantum substrate: gate unitarity, circuit lowering, XEB."""
+
+import numpy as np
+import pytest
+
+from repro.quantum import gates, statevector, xeb
+from repro.quantum.circuits import (
+    circuit_to_network,
+    random_1d_circuit,
+    sycamore_like,
+    zuchongzhi_like,
+)
+
+
+@pytest.mark.parametrize("name", sorted(gates.GATES_1Q))
+def test_1q_gates_unitary(name):
+    u = gates.GATES_1Q[name]
+    np.testing.assert_allclose(u @ u.conj().T, np.eye(2), atol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(gates.GATES_2Q))
+def test_2q_gates_unitary(name):
+    u = gates.GATES_2Q[name]
+    np.testing.assert_allclose(u @ u.conj().T, np.eye(4), atol=1e-6)
+
+
+def test_fsim_special_cases():
+    np.testing.assert_allclose(
+        gates.fsim(0, 0), np.eye(4, dtype=np.complex64), atol=1e-7
+    )
+    iswap_like = gates.fsim(np.pi / 2, 0)
+    np.testing.assert_allclose(
+        np.abs(iswap_like[1, 2]), 1.0, atol=1e-6
+    )
+
+
+def test_statevector_normalized():
+    c = random_1d_circuit(8, 6, seed=0)
+    p = statevector.probabilities(c)
+    assert abs(p.sum() - 1.0) < 1e-4
+
+
+def test_circuit_network_shape():
+    c = sycamore_like(3, 3, 4, seed=1)
+    tn, arrays = circuit_to_network(c, bitstring="0" * 9)
+    assert tn.num_tensors == len(arrays)
+    assert not tn.is_hyper()
+    # every non-open index has degree exactly 2
+    assert all(d == 2 for ix, d in tn.ind_degree.items())
+
+
+def test_patterns_differ():
+    a = sycamore_like(3, 3, 8, seed=0)
+    b = zuchongzhi_like(3, 3, 8, seed=0)
+    pa = [op.qubits for op in a.ops if len(op.qubits) == 2]
+    pb = [op.qubits for op in b.ops if len(op.qubits) == 2]
+    assert pa != pb
+
+
+def test_xeb_ideal_sampling_near_one():
+    """Sampling from the circuit's own distribution: E[F_XEB] ≈ 1 for an
+    RQC deep enough to be Porter-Thomas distributed."""
+    c = random_1d_circuit(10, 12, seed=3)
+    probs = statevector.probabilities(c)
+    samples = xeb.sample_bitstrings(probs, 4000, seed=0)
+    f = xeb.linear_xeb(10, probs[samples])
+    assert 0.6 < f < 1.6
+    # uniform sampling → F ≈ 0
+    rng = np.random.default_rng(0)
+    uni = rng.integers(0, len(probs), 4000)
+    f0 = xeb.linear_xeb(10, probs[uni])
+    assert abs(f0) < 0.25

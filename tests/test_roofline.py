@@ -1,0 +1,68 @@
+"""Roofline analysis machinery: HLO collective parsing + analytic model."""
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.models import build_model
+from repro.parallel.sharding import count_params
+from repro.roofline.analysis import collective_bytes, shape_bytes
+from repro.roofline.analytic import cell_flops, cell_hbm_bytes, forward_flops
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert shape_bytes("f32[8]{0}") == 32
+    assert shape_bytes("(f32[4,4], bf16[2,2])") == 64 + 8
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_collective_parse():
+    hlo = """
+  %ag = bf16[1024,512]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = f32[256]{0} all-reduce(%y), to_apply=%add
+  %rs = (f32[128]{0}, f32[128]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = bf16[32,32]{1,0} all-to-all(%w), dimensions={1}
+  %ags = bf16[8,8]{1,0} all-gather-start(%v), dimensions={0}
+  %agd = bf16[8,8]{1,0} all-gather-done(%ags)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 1024 * 512 * 2 + 8 * 8 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 2 * 128 * 4
+    assert out["collective-permute"] == 64 * 4
+    assert out["all-to-all"] == 32 * 32 * 2
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-moe-16b",
+                                  "mamba2-130m", "zamba2-7b",
+                                  "seamless-m4t-medium"])
+def test_analytic_flops_positive_and_ordered(arch):
+    cfg = get_config(arch)
+    train = cell_flops(cfg, SHAPES["train_4k"])
+    prefill = cell_flops(cfg, SHAPES["prefill_32k"])
+    decode = cell_flops(cfg, SHAPES["decode_32k"])
+    assert train > 0 and prefill > 0 and decode > 0
+    # training a 1M-token batch costs far more than one decode token
+    assert train > decode * 100
+
+
+def test_analytic_matches_6nd_for_dense():
+    """For a dense decoder the analytic forward ≈ 2·N·tokens + attention
+    (within 2x of the 6ND/3 rule)."""
+    cfg = get_config("deepseek-7b")
+    model = build_model(cfg)
+    n = count_params(model.param_defs())
+    B, S = 8, 4096
+    fwd = forward_flops(cfg, B, S)
+    rule = 2.0 * n * B * S
+    assert 0.5 * rule < fwd < 2.0 * rule
+
+
+def test_hbm_bytes_decode_dominated_by_cache():
+    cfg = get_config("llama3-405b")
+    model = build_model(cfg)
+    n = count_params(model.param_defs())
+    b = cell_hbm_bytes(cfg, SHAPES["decode_32k"], n)
+    # 2.2TB KV cache + 0.8TB params
+    assert b > 2e12

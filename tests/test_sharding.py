@@ -1,0 +1,110 @@
+"""Sharding resolution: divisibility-aware axis dropping, param specs."""
+
+import subprocess
+import sys
+
+import jax
+import pytest
+
+
+def test_resolve_spec_drops_nondivisible(monkeypatch):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import resolve_spec
+
+    mesh = make_host_mesh((1,), ("data",))
+    # with shape divisible: keeps axis
+    assert resolve_spec(("fsdp",), mesh, (16,)) == P("data")
+    # non-divisible: drops — only possible to see with >1-sized axes, so
+    # emulate via a fake mesh below (subprocess covers the real case)
+    assert resolve_spec((None, "fsdp"), mesh, (3, 8)) == P(None, "data")
+
+
+DRYRUN_SMALL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.configs import get_config, smoke_shrink
+from repro.models import build_model
+from repro.parallel.sharding import (
+    abstract_params, param_shardings, logical_shardings, resolve_spec,
+)
+from repro.train import optimizer as opt
+from repro.train.train_step import (
+    abstract_state, make_train_step, state_logical, make_decode_step,
+)
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
+
+# divisibility dropping: vocab 50280 % 2 == 0 keeps, odd dims drop
+r = resolve_spec(("tp", "fsdp"), mesh, (7, 8))
+assert r == P(None, "data"), r
+
+for arch in ("llama3.2-3b", "deepseek-moe-16b", "mamba2-130m"):
+    cfg = smoke_shrink(get_config(arch))
+    model = build_model(cfg)
+    ocfg = opt.OptimizerConfig()
+    step = make_train_step(model, ocfg)
+    st_abs = abstract_state(model, ocfg)
+    st_sh = logical_shardings(st_abs, state_logical(model, ocfg), mesh)
+    B, S = 8, 32
+    batch_abs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    b_log = {"tokens": ("dp", None), "labels": ("dp", None)}
+    b_sh = logical_shardings(batch_abs, b_log, mesh)
+    lowered = jax.jit(
+        step, in_shardings=(st_sh, b_sh), out_shardings=(st_sh, None)
+    ).lower(st_abs, batch_abs)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis() is not None
+    print("ok", arch)
+
+# decode path on the multi-pod mini mesh
+cfg = smoke_shrink(get_config("qwen3-4b"))
+model = build_model(cfg)
+from repro.parallel.sharding import abstract_params
+defs = model.param_defs()
+cache_spec = model.cache_spec(8, 64)
+is_pair = lambda x: isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], jax.ShapeDtypeStruct)
+cache_abs = jax.tree.map(lambda t: t[0], cache_spec, is_leaf=is_pair)
+cache_log = jax.tree.map(lambda t: tuple(None if a == "layer" else a for a in t[1]), cache_spec, is_leaf=is_pair)
+p_sh = param_shardings(defs, mesh)
+c_sh = logical_shardings(cache_abs, cache_log, mesh)
+fn = make_decode_step(model)
+lowered = jax.jit(fn, in_shardings=(
+    p_sh, c_sh,
+    logical_shardings(jax.ShapeDtypeStruct((8, 1), jnp.int32), ("dp", None), mesh),
+    NamedSharding(mesh, P()),
+)).lower(
+    abstract_params(defs), cache_abs,
+    jax.ShapeDtypeStruct((8, 1), jnp.int32),
+    jax.ShapeDtypeStruct((), jnp.int32),
+)
+compiled = lowered.compile()
+print("ok decode")
+
+# roofline extraction on the compiled artifact
+from repro.roofline.analysis import analyze_compiled
+roof = analyze_compiled(compiled, 8)
+assert roof.flops > 0
+print("collectives:", sorted(roof.coll_bytes))
+print("DONE")
+"""
+
+
+def test_dryrun_machinery_small_mesh():
+    """Full dry-run path (lower+compile+roofline) on an 8-device mini mesh
+    — subprocess because device count locks at first jax init."""
+    r = subprocess.run(
+        [sys.executable, "-c", DRYRUN_SMALL],
+        capture_output=True, text=True, timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

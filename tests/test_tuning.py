@@ -1,0 +1,71 @@
+"""Algorithm 2 (tuningSliceFinder) and branch merging (Sec. V)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_closed_network, random_tree
+from repro.core.merging import (
+    gemm_efficiency,
+    merge_branches,
+    modeled_tree_time,
+    orient_gemms,
+)
+from repro.core.slicing import find_slices
+from repro.core.tuning import tuning_slice_finder
+
+
+@given(n=st.integers(12, 26), seed=st.integers(0, 9999))
+@settings(max_examples=15)
+def test_tuning_never_worse_than_initial(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    target = max(tree.width() - 3, 2)
+    S0 = find_slices(tree, target, method="lifetime")
+    c0 = tree.sliced_cost(S0)
+    res = tuning_slice_finder(tree, target, max_rounds=6)
+    assert res.sliced_cost <= c0 + 1e-9
+    res.tree.check_valid()
+    assert res.tree.sliced_width(res.smask) <= target
+
+
+def test_tuning_improves_on_adversarial_tree():
+    """A high-temperature (bad) greedy tree leaves room: tuning should
+    strictly reduce C(B)·O(B,S) on at least this instance."""
+    tn = random_closed_network(40, 3, 99)
+    tree = random_tree(tn, seed=1)  # temperature path
+    target = max(tree.width() - 4, 2)
+    S0 = find_slices(tree, target, method="lifetime")
+    res = tuning_slice_finder(tree, target, max_rounds=20)
+    assert res.sliced_cost <= tree.sliced_cost(S0)
+
+
+# ---------------------------------------------------------------- merging
+def test_gemm_efficiency_surface_shape():
+    # aligned big GEMM ≈ peak; narrow K collapses
+    assert gemm_efficiency(10, 10, 10) > 0.8
+    assert gemm_efficiency(10, 10, 1) < 0.15
+    # sunway surface reproduces the paper's narrow-GEMM pathology (<4%)
+    assert gemm_efficiency(20, 2, 2, surface="sunway") < 0.05
+
+
+@given(n=st.integers(14, 28), seed=st.integers(0, 9999))
+@settings(max_examples=10)
+def test_merging_never_increases_modeled_time(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed)
+    target = max(tree.width() - 3, 2)
+    S = find_slices(tree, target, method="lifetime")
+    res = merge_branches(tree, S)
+    assert res.time_after <= res.time_before + 1e-12
+    res.tree.check_valid()
+
+
+def test_orient_gemms_valid():
+    tn = random_closed_network(20, 3, 5)
+    tree = random_tree(tn, 5)
+    t2 = orient_gemms(tree)
+    t2.check_valid()
+    from repro.core.tensor_network import popcount
+
+    for v, (l, r) in t2.children.items():
+        assert popcount(t2.emask[l]) >= popcount(t2.emask[r])
