@@ -1,0 +1,103 @@
+"""Batch-sampling throughput — the paper's flagship workload (Sec. VI:
+one million correlated samples in 96.1 s).
+
+One sliced contraction with k open output qubits yields 2^k correlated
+amplitudes; sampling bitstrings from the batch is then nearly free.  We
+measure, per open-qubit count k:
+
+  * contraction wall time for the full batch (the dominant cost),
+  * end-to-end samples/second for a fixed draw count (contract + sample),
+  * the per-amplitude-engine equivalent rate for contrast (the batch's
+    whole point: amortize one contraction over the entire sample set).
+
+Standalone runs can persist a JSON record for ``benchmarks.make_tables``:
+
+    PYTHONPATH=src python -m benchmarks.bench_sampling_throughput \
+        --json experiments/sampling/throughput.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core import sample_bitstrings, simulate_amplitude
+from repro.quantum.circuits import sycamore_like
+
+from .common import timer
+
+CIRCUIT = dict(rows=4, cols=4, cycles=10, seed=0)
+NUM_SAMPLES = 10_000
+OPEN_COUNTS = (2, 4, 6)
+TARGET_DIM = 12
+
+
+def _records() -> list[dict]:
+    circ = sycamore_like(**CIRCUIT)
+    nq = circ.num_qubits
+    recs = []
+    # per-amplitude contrast: one scalar amplitude through the full engine
+    _, t_single = timer(
+        lambda: simulate_amplitude(circ, "0" * nq, target_dim=TARGET_DIM),
+        repeat=2,
+    )
+    for k in OPEN_COUNTS:
+        open_q = tuple(range(nq - k, nq))
+        res, t_batch = timer(
+            lambda oq=open_q: sample_bitstrings(
+                circ,
+                num_samples=NUM_SAMPLES,
+                open_qubits=oq,
+                target_dim=TARGET_DIM,
+            ),
+            repeat=2,
+        )
+        recs.append(
+            {
+                "k_open": k,
+                "batch_size": res.batch.size,
+                "num_slices": 1 << res.report.num_sliced,
+                "wall_s": t_batch,
+                "samples_per_s": NUM_SAMPLES / t_batch,
+                "amps_per_s": res.batch.size / t_batch,
+                "per_amp_engine_amps_per_s": 1.0 / t_single,
+                "xeb": res.xeb,
+            }
+        )
+    return recs
+
+
+def run() -> list[str]:
+    rows = []
+    for r in _records():
+        rows.append(
+            f"sampling_k{r['k_open']},{r['wall_s']*1e6:.0f},"
+            f"samples_per_s={r['samples_per_s']:.0f};"
+            f"batch={r['batch_size']};slices={r['num_slices']};"
+            f"batch_amps_per_s={r['amps_per_s']:.1f};"
+            f"single_amps_per_s={r['per_amp_engine_amps_per_s']:.1f}"
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write records to this JSON path")
+    args = ap.parse_args()
+    recs = _records()
+    for r in recs:
+        print(
+            f"sampling_k{r['k_open']},{r['wall_s']*1e6:.0f},"
+            f"samples_per_s={r['samples_per_s']:.0f}"
+        )
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump({"circuit": CIRCUIT, "num_samples": NUM_SAMPLES,
+                       "records": recs}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,7 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
-experiments/dryrun/*.json.
+experiments/dryrun/*.json, plus the §Sampling throughput table when
+``benchmarks.bench_sampling_throughput --json`` output is present under
+experiments/sampling/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -63,6 +65,30 @@ def load(dryrun_dir="experiments/dryrun"):
     return recs
 
 
+def print_sampling_table(sampling_dir="experiments/sampling") -> None:
+    """§Sampling throughput rows (batched correlated-amplitude sampling),
+    emitted only when the benchmark's JSON records exist."""
+    paths = sorted(glob.glob(os.path.join(sampling_dir, "*.json")))
+    if not paths:
+        return
+    print("\n### Batch-sampling throughput "
+          "(one sliced contraction per 2^k batch)\n")
+    print("| k open | batch | slices | wall | samples/s | "
+          "batch amps/s | per-amp engine amps/s | XEB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        for r in rec.get("records", []):
+            print(
+                f"| {r['k_open']} | {r['batch_size']} | {r['num_slices']} "
+                f"| {fmt_s(r['wall_s'])} | {r['samples_per_s']:.0f} "
+                f"| {r['amps_per_s']:.1f} "
+                f"| {r['per_amp_engine_amps_per_s']:.1f} "
+                f"| {r['xeb']:+.3f} |"
+            )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -112,6 +138,7 @@ def main() -> None:
                 f"| {e['dominant']} | {fmt_s(e['bound_s'])} "
                 f"| {e['useful_ratio']:.2f} | {e['roofline_fraction']:.2f} |"
             )
+    print_sampling_table()
 
 
 if __name__ == "__main__":

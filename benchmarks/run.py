@@ -15,6 +15,7 @@ def main() -> None:
         bench_end_to_end,
         bench_flops_efficiency,
         bench_roofline,
+        bench_sampling_throughput,
         bench_slice_count,
         bench_slicefinder_speed,
         bench_slicing_overhead,
@@ -26,6 +27,7 @@ def main() -> None:
         ("fig10", bench_slicing_overhead),
         ("fig11", bench_flops_efficiency),
         ("e2e", bench_end_to_end),
+        ("sampling", bench_sampling_throughput),
         ("roofline", bench_roofline),
     ]
     print("name,us_per_call,derived")

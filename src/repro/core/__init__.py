@@ -8,12 +8,20 @@ The paper's contribution lives here:
   tuning          — branch exchange + tuningSliceFinder (Alg. 2)
   merging         — branch merging under the TPU F(M,N,K) surface (Sec. V)
   pathfinder      — contraction-order search (greedy/partition/DP oracle)
-  executor        — jitted sliced contraction (vmap slice batching)
+  executor        — jitted sliced contraction (vmap slice batching,
+                    open-index amplitude batches)
   distributed     — shard_map slice parallelism + psum (the one all-reduce)
-  api             — end-to-end pipeline + PlanReport
+  api             — end-to-end pipeline + PlanReport; sample_bitstrings
+                    (batched correlated-amplitude sampling, Sec. VI)
 """
 
-from .api import PlanReport, SimulationResult, plan_contraction, simulate_amplitude  # noqa: F401
+from .api import (  # noqa: F401
+    PlanReport,
+    SimulationResult,
+    plan_contraction,
+    sample_bitstrings,
+    simulate_amplitude,
+)
 from .contraction_tree import ContractionTree  # noqa: F401
 from .executor import ContractionPlan, simplify_network  # noqa: F401
 from .lifetime import Stem, detect_stem  # noqa: F401

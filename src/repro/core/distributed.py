@@ -42,13 +42,21 @@ def contract_sharded(
     """Contract all slices with slice-parallelism over ``axis_names``.
 
     Every device scans its chunk of slice ids and contributes to one psum.
+    Each scan step runs ``slice_batch`` subtasks under ``vmap`` (the
+    executor's GEMM-recovery batching, now per device).
+
+    When the plan's network holds output indices open (batched
+    correlated-amplitude sampling), the per-device accumulator is the full
+    open-batch tensor — the open axes are *replicated*, only the slice axis
+    is sharded — so the one psum returns the complete 2^k amplitude batch
+    on every device.
     """
     ndev = 1
     for ax in axis_names:
         ndev *= mesh.shape[ax]
     n_slices = 1 << plan.num_sliced
-    per_dev = -(-n_slices // ndev)  # ceil
-    total = per_dev * ndev
+    chunk = ndev * max(1, slice_batch)
+    total = -(-n_slices // chunk) * chunk  # ceil to a multiple
     # pad with repeats of slice 0 and a 0/1 validity weight
     ids = np.arange(total, dtype=np.int32) % n_slices
     valid = (np.arange(total) < n_slices).astype(np.complex64)
@@ -60,15 +68,22 @@ def contract_sharded(
     @jax.jit
     def run(arrs, ids_, valid_):
         def worker(ids_local, valid_local):
-            def body(acc, iv):
-                sid, w = iv
-                return acc + w * plan.contract_slice(arrs, sid), None
+            batched = jax.vmap(lambda sid: plan.contract_slice(arrs, sid))
+            idb = ids_local.reshape(-1, max(1, slice_batch))
+            vb = valid_local.reshape(-1, max(1, slice_batch))
 
             out_shape = jax.eval_shape(
                 lambda: plan.contract_slice(arrs, jnp.int32(0))
             )
+            wshape = (-1,) + (1,) * len(out_shape.shape)
+
+            def body(acc, iv):
+                sids, w = iv
+                contrib = batched(sids) * w.reshape(wshape)
+                return acc + jnp.sum(contrib, axis=0), None
+
             acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
-            acc, _ = jax.lax.scan(body, acc0, (ids_local, valid_local))
+            acc, _ = jax.lax.scan(body, acc0, (idb, vb))
             return jax.lax.psum(acc, axis_names)
 
         return shard_map(

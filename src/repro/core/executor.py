@@ -12,6 +12,16 @@ program:
     by the slice-batch factor),
   * results are summed — the paper's single all-reduce.
 
+Open output indices are first-class: when the network declares
+``open_inds`` (e.g. a subset of final qubit wires held open for batched
+correlated-amplitude sampling), every slice contributes a *tensor* of
+amplitudes — one axis per open index, axes in ``tn.open_inds`` order —
+and the cross-slice sum accumulates that whole batch.  One sliced
+contraction therefore produces ``2^k`` correlated amplitudes instead of
+one, which is the paper's flagship sampling workload (Sec. VI: 1M
+correlated samples of Sycamore).  See :mod:`repro.sampling` for the
+sampling layer built on top.
+
 Distribution across devices lives in :mod:`repro.core.distributed`.
 """
 
@@ -104,6 +114,15 @@ def simplify_network(
     return TensorNetwork(new_inputs, tn.open_inds, tn.ind_sizes), new_arrays
 
 
+def auto_slice_batch(requested: int, n_slices: int) -> int:
+    """Largest power-of-two batch ≤ ``requested`` that divides ``n_slices``
+    (contract_all requires the batch to tile the slice range exactly)."""
+    sb = 1
+    while sb * 2 <= min(requested, n_slices) and n_slices % (sb * 2) == 0:
+        sb *= 2
+    return sb
+
+
 @dataclasses.dataclass
 class _Step:
     lhs: int  # env key
@@ -153,6 +172,24 @@ class ContractionPlan:
         want = tuple(ix for ix in tn.open_inds if ix in raw_out)
         self.out_perm = tuple(raw_out.index(ix) for ix in want)
         self.out_inds = want if want else raw_out
+
+    # ------------------------------------------------------------------
+    @property
+    def num_open(self) -> int:
+        """Number of open output indices carried through the stem."""
+        return len(self.out_inds)
+
+    @property
+    def batch_size(self) -> int:
+        """Correlated amplitudes produced per full contraction (2^k)."""
+        n = 1
+        for ix in self.out_inds:
+            n *= self.tn.size_of(ix)
+        return n
+
+    def out_shape(self) -> tuple[int, ...]:
+        """Shape of the contraction output (one axis per open index)."""
+        return tuple(self.tn.size_of(ix) for ix in self.out_inds)
 
     # ------------------------------------------------------------------
     def slice_values(self, slice_id):

@@ -8,19 +8,25 @@ devices *before* any jax initialization.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit/auto axis types; older jax has neither
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+
+except ImportError:
+
+    def _axis_kwargs(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Small meshes for tests/examples (must divide available devices)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))

@@ -120,12 +120,20 @@ def circuit_to_network(
     circuit: Circuit,
     bitstring: str | None = None,
     open_final: bool = False,
+    open_qubits: Sequence[int] | None = None,
 ) -> tuple[TensorNetwork, list[np.ndarray]]:
     """Lower a circuit to (TensorNetwork, arrays).
 
     Initial state |0…0>.  If ``bitstring`` is given the final state is
     projected (closed network, scalar amplitude).  If ``open_final`` the
     final wire indices stay open (statevector-shaped output).
+
+    ``open_qubits`` selects the *partial* projection used for batched
+    correlated-amplitude sampling: the listed qubits keep their final wire
+    open (one output axis each, ascending qubit order) while every other
+    qubit is projected onto its ``bitstring`` value.  One contraction of
+    the resulting network yields all ``2^k`` amplitudes that share the
+    projected prefix — the paper's batch-per-slice sampling workload.
     """
     n = circuit.num_qubits
     seg = [0] * n  # current wire segment per qubit
@@ -157,7 +165,22 @@ def circuit_to_network(
             tensors.append([new_a, new_b, old_a, old_b])
             arrays.append(arr.reshape(2, 2, 2, 2))
     open_inds: list[str] = []
-    if bitstring is not None:
+    if open_qubits is not None:
+        open_set = sorted(set(open_qubits))
+        if any(q < 0 or q >= n for q in open_set):
+            raise ValueError(f"open_qubits out of range for {n} qubits")
+        if bitstring is None:
+            bitstring = "0" * n
+        assert len(bitstring) == n
+        for q in range(n):
+            if q in open_set:
+                continue
+            bra = np.zeros(2, dtype=np.complex64)
+            bra[int(bitstring[q])] = 1.0
+            tensors.append([wire(q)])
+            arrays.append(bra)
+        open_inds = [wire(q) for q in open_set]
+    elif bitstring is not None:
         assert len(bitstring) == n
         for q in range(n):
             bra = np.zeros(2, dtype=np.complex64)

@@ -17,6 +17,13 @@ def porter_thomas_expectation(num_qubits: int) -> float:
     return float((2.0 * n / (n + 1.0)) - 1.0)
 
 
+def xeb_from_amplitudes(num_qubits: int, amplitudes: np.ndarray) -> float:
+    """Linear XEB of a sampled set given the samples' *amplitudes* (as
+    returned by the batched open-index contraction): F = 2^n/k·Σ|a_i|^2 - 1.
+    """
+    return linear_xeb(num_qubits, np.abs(np.asarray(amplitudes)) ** 2)
+
+
 def sample_bitstrings(
     probs: np.ndarray, k: int, seed: int = 0
 ) -> np.ndarray:

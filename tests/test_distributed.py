@@ -6,6 +6,7 @@ import sys
 
 import numpy as np
 
+from conftest import subprocess_kwargs
 from repro.core import ContractionPlan, simplify_network
 from repro.core.distributed import contract_resumable
 from repro.core.pathfinder import random_greedy_tree
@@ -44,8 +45,7 @@ def test_contract_sharded_8dev():
     r = subprocess.run(
         [sys.executable, "-c", SHARDED],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        **subprocess_kwargs(),
     )
     assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
 

@@ -3,6 +3,7 @@
 import subprocess
 import sys
 
+from conftest import subprocess_kwargs
 from repro.parallel.pipeline import bubble_fraction
 
 
@@ -52,7 +53,6 @@ def test_pipeline_matches_sequential():
     r = subprocess.run(
         [sys.executable, "-c", PIPE],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        **subprocess_kwargs(),
     )
     assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

@@ -6,6 +6,8 @@ import sys
 import jax
 import pytest
 
+from conftest import subprocess_kwargs
+
 
 def test_resolve_spec_drops_nondivisible(monkeypatch):
     from jax.sharding import PartitionSpec as P
@@ -104,7 +106,6 @@ def test_dryrun_machinery_small_mesh():
     r = subprocess.run(
         [sys.executable, "-c", DRYRUN_SMALL],
         capture_output=True, text=True, timeout=1200,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
-        cwd="/root/repo",
+        **subprocess_kwargs(),
     )
     assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

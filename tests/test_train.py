@@ -22,8 +22,11 @@ from repro.train.grad_compress import (
 def test_loss_decreases_small_lm():
     from repro.launch.train import train
 
+    # 80 steps, not 60: with these deterministic seeds the loss drop at 60
+    # steps is 0.094 — under the 0.1 bar (the test predates a working
+    # collection and had never actually run); at 80 the drop is ~0.19.
     losses = train(
-        "llama3.2-3b", steps=60, smoke=True, global_batch=4, seq_len=32,
+        "llama3.2-3b", steps=80, smoke=True, global_batch=4, seq_len=32,
         lr=5e-3,
     )
     assert losses[-1] < losses[0] - 0.1, (losses[0], losses[-1])
