@@ -1,7 +1,9 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
 experiments/dryrun/*.json, plus the §Sampling throughput table when
 ``benchmarks.bench_sampling_throughput --json`` output is present under
-experiments/sampling/.
+experiments/sampling/, and the §Lowering backend table from the
+trajectory records ``benchmarks.bench_flops_efficiency`` appends under
+experiments/lowering/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -89,6 +91,37 @@ def print_sampling_table(sampling_dir="experiments/sampling") -> None:
             )
 
 
+def print_lowering_table(lowering_dir="experiments/lowering") -> None:
+    """§Lowering backend rows (einsum oracle vs lowered-GEMM schedule),
+    one row per trajectory record."""
+    paths = sorted(glob.glob(os.path.join(lowering_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        rows.extend(rec.get("records", []))
+    if not rows:
+        return
+    print("\n### Lowered-GEMM backend vs einsum oracle (stem workload)\n")
+    print("| workload | einsum wall | gemm wall | gemm/einsum | "
+          "schedule (nodes per backend) | pad waste |")
+    print("|---|---|---|---|---|---|")
+    for r in rows:
+        be = r.get("backends", {})
+        sched = be.get("gemm", {}).get("schedule", {})
+        counts = ", ".join(
+            f"{k}:{v}" for k, v in sorted(sched.get("backends", {}).items())
+        ) or "-"
+        print(
+            f"| {r.get('workload', '-')} "
+            f"| {fmt_s(be.get('einsum', {}).get('wall_s'))} "
+            f"| {fmt_s(be.get('gemm', {}).get('wall_s'))} "
+            f"| {r.get('gemm_over_einsum', float('nan')):.2f}× "
+            f"| {counts} "
+            f"| {sched.get('pad_waste', 0.0)*100:.1f}% |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -139,6 +172,7 @@ def main() -> None:
                 f"| {e['useful_ratio']:.2f} | {e['roofline_fraction']:.2f} |"
             )
     print_sampling_table()
+    print_lowering_table()
 
 
 if __name__ == "__main__":

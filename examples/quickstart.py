@@ -3,8 +3,14 @@ lifetime-based contraction engine, check it against the statevector
 oracle, then draw correlated bitstring samples from one batched
 contraction (the paper's sampling workload).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--backend {einsum,gemm}]
+
+``--backend gemm`` executes the lowered kernel schedule (every tree node
+normalized to GEMM form and refined onto Pallas/dot/einsum — see
+``src/repro/lowering/``) instead of the einsum oracle path.
 """
+
+import argparse
 
 from repro.core import sample_bitstrings, simulate_amplitude
 from repro.quantum import statevector
@@ -12,6 +18,12 @@ from repro.quantum.circuits import random_1d_circuit
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=("einsum", "gemm"), default=None,
+                    help="execution backend (default: $REPRO_BACKEND or "
+                    "einsum)")
+    args = ap.parse_args()
+
     circuit = random_1d_circuit(n=10, cycles=8, seed=42)
     bitstring = "0110100101"
 
@@ -20,15 +32,25 @@ def main() -> None:
         bitstring,
         target_dim=5,          # memory bound: no tensor above 2^5 entries
         method="lifetime",     # the paper's Algorithm 1 (+ tuning/merging)
+        backend=args.backend,
     )
     ref = statevector.amplitude(circuit, bitstring)
 
     print("planner report :", result.report.row())
+    if result.plan is not None and result.plan.schedule is not None:
+        print("lowered sched  :", result.plan.schedule.summary_row())
     print("amplitude      :", complex(result.value))
     print("statevector ref:", ref)
     print("|error|        :", abs(complex(result.value) - ref))
     assert abs(complex(result.value) - ref) < 1e-4
     print("OK")
+
+    # a second request for the same circuit family hits the plan cache
+    result2 = simulate_amplitude(
+        circuit, "1001011010", target_dim=5, backend=args.backend
+    )
+    print("repeat request :", result2.report.row(),
+          f"(plan {result2.report.plan_wall_s*1e3:.2f}ms)")
 
     # batch sampling: hold 3 output qubits open → one contraction yields
     # all 8 correlated amplitudes; draw bitstrings by frequency sampling
@@ -37,6 +59,7 @@ def main() -> None:
         num_samples=100,
         open_qubits=(7, 8, 9),
         target_dim=5,
+        backend=args.backend,
     )
     print("sampled        :", samples.bitstrings[:5], "...")
     print("sampled XEB    :", f"{samples.xeb:+.4f}")

@@ -12,14 +12,24 @@ and executing the best plan (sliced, batched, single all-reduce) two ways:
     drawn and XEB-scored.
 
     PYTHONPATH=src python examples/simulate_sycamore.py \
-        [--rows 4 --cols 4 --cycles 10 --num-samples 1000 --open-qubits 4]
+        [--rows 4 --cols 4 --cycles 10 --num-samples 1000 --open-qubits 4 \
+         --backend gemm]
+
+``--backend gemm`` compiles each plan into the lowered kernel schedule
+(``src/repro/lowering/``: GEMM normalization + adaptive tile refiner)
+and prints the per-variant schedule summary (node counts per kernel
+backend, MXU pad waste) next to the plan row.
 """
 
 import argparse
 
 import numpy as np
 
-from repro.core import plan_contraction, sample_bitstrings, simulate_amplitude
+from repro.core import (
+    plan_contraction,
+    sample_bitstrings,
+    simulate_amplitude,
+)
 from repro.core.executor import ContractionPlan, simplify_network
 from repro.quantum import xeb
 from repro.quantum.circuits import circuit_to_network, sycamore_like
@@ -37,8 +47,14 @@ def main() -> None:
                     help="correlated bitstring samples from one batch")
     ap.add_argument("--open-qubits", type=int, default=4,
                     help="output qubits held open (batch = 2^k amplitudes)")
+    ap.add_argument("--backend", choices=("einsum", "gemm"), default=None,
+                    help="execution backend (default: $REPRO_BACKEND or "
+                    "einsum)")
     args = ap.parse_args()
 
+    from repro.core import default_backend
+
+    backend = args.backend if args.backend is not None else default_backend()
     circ = sycamore_like(args.rows, args.cols, args.cycles, seed=0)
     nq = circ.num_qubits
     tn, arrays = circuit_to_network(circ, bitstring="0" * nq)
@@ -59,17 +75,24 @@ def main() -> None:
             f"{rep.slicing_overhead:>10.3f}{rep.modeled_time_s:>12.3e}"
             f"{rep.plan_wall_s:>8.2f}"
         )
+        if backend == "gemm":
+            plan = ContractionPlan(tree, smask, backend="gemm")
+            print(f"{'':<22}  {plan.schedule.summary_row()}")
 
-    # XEB over a few sampled bitstrings through the full engine
+    # XEB over a few sampled bitstrings through the full engine (repeat
+    # requests share one compiled plan via the plan cache)
     rng = np.random.default_rng(0)
     probs = []
     for i in range(args.samples):
         bs = "".join(str(b) for b in rng.integers(0, 2, nq))
-        res = simulate_amplitude(circ, bs, target_dim=args.target_dim)
+        res = simulate_amplitude(circ, bs, target_dim=args.target_dim,
+                                 backend=args.backend)
         probs.append(abs(complex(res.value)) ** 2)
-    f = xeb.linear_xeb(nq, np.asarray(probs))
-    print(f"\nLinear XEB over {args.samples} random bitstrings: {f:+.4f} "
-          "(random strings → ≈0; circuit-sampled strings → ≈1)")
+    if args.samples > 0:
+        print(f"\nper-amplitude engine: {res.report.row()}")
+        f = xeb.linear_xeb(nq, np.asarray(probs))
+        print(f"\nLinear XEB over {args.samples} random bitstrings: {f:+.4f} "
+              "(random strings → ≈0; circuit-sampled strings → ≈1)")
 
     # the paper's batch-sampling workload: one contraction, 2^k correlated
     # amplitudes, num_samples frequency-sampled bitstrings
@@ -79,6 +102,7 @@ def main() -> None:
         num_samples=args.num_samples,
         open_qubits=tuple(range(nq - k, nq)),
         target_dim=args.target_dim,
+        backend=args.backend,
     )
     uniq = len(set(res.bitstrings))
     print(

@@ -9,7 +9,8 @@ The paper's contribution lives here:
   merging         — branch merging under the TPU F(M,N,K) surface (Sec. V)
   pathfinder      — contraction-order search (greedy/partition/DP oracle)
   executor        — jitted sliced contraction (vmap slice batching,
-                    open-index amplitude batches)
+                    open-index amplitude batches, einsum + lowered-GEMM
+                    backends via repro.lowering)
   distributed     — shard_map slice parallelism + psum (the one all-reduce)
   api             — end-to-end pipeline + PlanReport; sample_bitstrings
                     (batched correlated-amplitude sampling, Sec. VI)
@@ -18,12 +19,17 @@ The paper's contribution lives here:
 from .api import (  # noqa: F401
     PlanReport,
     SimulationResult,
+    plan_compiled,
     plan_contraction,
     sample_bitstrings,
     simulate_amplitude,
 )
 from .contraction_tree import ContractionTree  # noqa: F401
-from .executor import ContractionPlan, simplify_network  # noqa: F401
+from .executor import (  # noqa: F401
+    ContractionPlan,
+    default_backend,
+    simplify_network,
+)
 from .lifetime import Stem, detect_stem  # noqa: F401
 from .slicing import find_slices, greedy_slicer, interval_optimal_slicer, slice_finder  # noqa: F401
 from .tensor_network import TensorNetwork  # noqa: F401

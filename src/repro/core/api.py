@@ -1,6 +1,16 @@
 """End-to-end pipeline: circuit → network → path → slicing → tuning →
-merging → sliced JAX contraction.  This is the public API the examples and
-benchmarks drive."""
+merging → lowering → sliced JAX contraction.  This is the public API the
+examples and benchmarks drive.
+
+``backend="gemm"`` compiles the planned tree through
+:mod:`repro.lowering` into an explicit kernel schedule (Pallas tiled
+GEMMs + refined fallbacks); the default ``"einsum"`` keeps the oracle
+path.  Planned artifacts are memoized in the compiled-plan cache
+(:data:`repro.lowering.cache.PLAN_CACHE`) keyed by the canonical network
+fingerprint + planner parameters, so repeated requests for the same
+circuit family skip planning and retracing — pass ``use_cache=False``
+to force a fresh plan.
+"""
 
 from __future__ import annotations
 
@@ -11,7 +21,12 @@ import time
 import numpy as np
 
 from .contraction_tree import ContractionTree
-from .executor import ContractionPlan, auto_slice_batch, simplify_network
+from .executor import (
+    ContractionPlan,
+    auto_slice_batch,
+    default_backend,
+    simplify_network,
+)
 from .lifetime import detect_stem
 from .merging import merge_branches, modeled_tree_time, orient_gemms
 from .pathfinder import random_greedy_tree
@@ -33,14 +48,30 @@ class PlanReport:
     slicing_overhead: float  # Eq. 4
     modeled_time_s: float  # Sec. V model, one chip
     plan_wall_s: float
+    # execution backend + lowering/cache metrics (PR 2)
+    backend: str = "einsum"
+    cache_hit: bool = False
+    cache_hits: int = 0
+    cache_misses: int = 0
+    lowered_backends: dict | None = None  # node counts per kernel backend
+    pad_waste: float = 0.0  # FLOPs-weighted MXU padding fraction
 
     def row(self) -> str:
-        return (
+        row = (
             f"tensors={self.num_tensors} W={self.width_before}->"
             f"{self.width_after} log2C={self.log2_cost:.2f} "
             f"slices={self.num_sliced} overhead={self.slicing_overhead:.3f} "
-            f"t_model={self.modeled_time_s:.3e}s plan={self.plan_wall_s:.2f}s"
+            f"t_model={self.modeled_time_s:.3e}s plan={self.plan_wall_s:.2f}s "
+            f"backend={self.backend}"
         )
+        if self.cache_hit:
+            row += " cache=hit"
+        if self.lowered_backends:
+            nodes = " ".join(
+                f"{k}={v}" for k, v in sorted(self.lowered_backends.items())
+            )
+            row += f" lowered[{nodes}] pad_waste={self.pad_waste*100:.1f}%"
+        return row
 
 
 @dataclasses.dataclass
@@ -49,6 +80,7 @@ class SimulationResult:
     report: PlanReport
     tree: ContractionTree
     smask: int
+    plan: ContractionPlan | None = None  # carries the lowered schedule
 
 
 def plan_contraction(
@@ -88,6 +120,80 @@ def plan_contraction(
     return tree, smask, report
 
 
+def plan_compiled(
+    tn,
+    target_dim: int,
+    dtype=None,
+    backend: str | None = None,
+    method: str = "lifetime",
+    tune: bool = True,
+    merge: bool = True,
+    repeats: int = 8,
+    seed: int = 0,
+    use_cache: bool = True,
+) -> tuple[ContractionPlan, PlanReport]:
+    """Plan + lower a network into an executable :class:`ContractionPlan`,
+    consulting the compiled-plan cache.
+
+    The cache key is the canonical network fingerprint (structure +
+    dtype + open indices, invariant under index relabeling) plus every
+    planner/lowering parameter, so a hit returns the *identical* plan
+    object — its lowered schedule and memoized jitted executables ride
+    along, which is what makes a hit skip retracing, not just planning.
+    The slicing mask ``S`` is part of the cached artifact (it is a
+    deterministic function of the key).
+    """
+    from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
+
+    import jax.numpy as jnp
+
+    backend = backend if backend is not None else default_backend()
+    dtype = jnp.dtype(dtype) if dtype is not None else jnp.complex64
+    t0 = time.perf_counter()
+    key = None
+    if use_cache:
+        key = network_fingerprint(
+            tn,
+            dtype,
+            extra=(backend, target_dim, method, tune, merge, repeats, seed),
+        )
+        ent = PLAN_CACHE.get(key)
+        if ent is not None:
+            stats = PLAN_CACHE.stats()
+            report = dataclasses.replace(
+                ent.report,
+                plan_wall_s=time.perf_counter() - t0,
+                cache_hit=True,
+                cache_hits=stats["hits"],
+                cache_misses=stats["misses"],
+            )
+            return ent.plan, report
+    tree, smask, report = plan_contraction(
+        tn, target_dim, method=method, tune=tune, merge=merge,
+        repeats=repeats, seed=seed,
+    )
+    plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
+    report.backend = plan.backend
+    if plan.schedule is not None:
+        # refiner feedback: the modeled time now reflects the refined
+        # schedule that will actually execute (per-slice × slice count)
+        report.modeled_time_s = plan.schedule.modeled_time_s * (
+            1 << plan.num_sliced
+        )
+        report.lowered_backends = plan.schedule.backend_counts()
+        report.pad_waste = plan.schedule.pad_waste()
+    report.plan_wall_s = time.perf_counter() - t0
+    if use_cache:
+        PLAN_CACHE.put(key, PlanEntry(plan, report))
+        stats = PLAN_CACHE.stats()
+        report = dataclasses.replace(
+            report,
+            cache_hits=stats["hits"],
+            cache_misses=stats["misses"],
+        )
+    return plan, report
+
+
 def simulate_amplitude(
     circuit,
     bitstring: str,
@@ -97,19 +203,37 @@ def simulate_amplitude(
     merge: bool = True,
     seed: int = 0,
     slice_batch: int = 4,
+    backend: str | None = None,
+    use_cache: bool = True,
 ) -> SimulationResult:
-    """Amplitude <bitstring|C|0…0> via the full planner + executor stack."""
+    """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
+
+    ``backend="gemm"`` executes the lowered kernel schedule (Pallas
+    tiled GEMMs + refined fallbacks); the default follows
+    ``REPRO_BACKEND`` / ``"einsum"``.  Two calls on the same circuit
+    share one compiled plan via the plan cache (different bitstrings
+    change leaf *values*, never network structure).
+    """
     from ..quantum.circuits import circuit_to_network  # avoid import cycle
 
     tn, arrays = circuit_to_network(circuit, bitstring=bitstring)
     tn, arrays = simplify_network(tn, arrays)
-    tree, smask, report = plan_contraction(
-        tn, target_dim, method=method, tune=tune, merge=merge, seed=seed
+    plan, report = plan_compiled(
+        tn,
+        target_dim,
+        dtype=arrays[0].dtype if arrays else None,
+        backend=backend,
+        method=method,
+        tune=tune,
+        merge=merge,
+        seed=seed,
+        use_cache=use_cache,
     )
-    plan = ContractionPlan(tree, smask)
     sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
     value = plan.contract_all(arrays, slice_batch=sb)
-    return SimulationResult(np.asarray(value), report, tree, smask)
+    return SimulationResult(
+        np.asarray(value), report, plan.tree, plan.smask, plan
+    )
 
 
 def sample_bitstrings(
@@ -126,6 +250,8 @@ def sample_bitstrings(
     sampler: str = "frequency",
     mesh=None,
     axis_names: tuple[str, ...] = ("data",),
+    backend: str | None = None,
+    use_cache: bool = True,
 ):
     """Draw correlated bitstring samples from one batched contraction —
     the paper's flagship workload (Sec. VI: 1M correlated Sycamore samples).
@@ -140,7 +266,10 @@ def sample_bitstrings(
 
     Pass a jax ``mesh`` to shard the slice ids over ``axis_names``
     (shard_map + one psum); the open-batch axes are replicated so every
-    device returns the full batch.
+    device returns the full batch.  ``backend="gemm"`` lowers the stem
+    to the refined kernel schedule (see :mod:`repro.lowering`) and the
+    compiled plan is cached per circuit family like
+    :func:`simulate_amplitude`.
 
     Returns a :class:`repro.sampling.SamplingResult`.
 
@@ -180,15 +309,17 @@ def sample_bitstrings(
         circuit, base_bitstring, open_qubits
     )
     # open indices cannot be sliced, so the width floor is the batch rank
-    tree, smask, report = plan_contraction(
+    plan, report = plan_compiled(
         tn,
         max(target_dim, len(open_qubits) + 1),
+        dtype=arrays[0].dtype if arrays else None,
+        backend=backend,
         method=method,
         tune=tune,
         merge=merge,
         seed=seed,
+        use_cache=use_cache,
     )
-    plan = ContractionPlan(tree, smask)
     amps = batch_mod.contract_amplitude_batch(
         plan, arrays, slice_batch=slice_batch, mesh=mesh, axis_names=axis_names
     )

@@ -50,6 +50,13 @@ def contract_sharded(
     open-batch tensor — the open axes are *replicated*, only the slice axis
     is sharded — so the one psum returns the complete 2^k amplitude batch
     on every device.
+
+    Plans built with ``backend="gemm"`` carry a lowered kernel schedule
+    (:mod:`repro.lowering`); ``contract_slice`` threads that same static
+    schedule through ``shard_map`` unchanged, so every device executes
+    the identical refined Pallas/dot/einsum program per node.  The jitted
+    shard_map program is memoized on the plan per (mesh, axis set, slice
+    batch) — repeated serving calls on a cached plan skip retracing.
     """
     ndev = 1
     for ax in axis_names:
@@ -64,6 +71,12 @@ def contract_sharded(
     from jax.experimental.shard_map import shard_map
 
     spec = P(axis_names)
+
+    cache = getattr(plan, "_compiled", None)
+    key = ("sharded", mesh, tuple(axis_names), max(1, slice_batch))
+    cached = cache.get(key) if cache is not None else None
+    if cached is not None:
+        return cached(list(arrays), jnp.asarray(ids), jnp.asarray(valid))
 
     @jax.jit
     def run(arrs, ids_, valid_):
@@ -94,6 +107,9 @@ def contract_sharded(
             check_rep=False,
         )(ids_, valid_)
 
+    if cache is not None:
+        # setdefault so concurrent threads converge on one jitted program
+        run = cache.setdefault(key, run)
     return run(list(arrays), jnp.asarray(ids), jnp.asarray(valid))
 
 

@@ -22,12 +22,22 @@ one, which is the paper's flagship sampling workload (Sec. VI: 1M
 correlated samples of Sycamore).  See :mod:`repro.sampling` for the
 sampling layer built on top.
 
+Two execution backends share the slice machinery: the default
+``einsum`` oracle path lowers every tree node to ``jnp.einsum``, while
+``backend="gemm"`` compiles the tree through :mod:`repro.lowering` into
+an explicit kernel schedule — each node normalized to
+transpose→reshape→GEMM form and refined onto Pallas ``tiled_matmul`` /
+``jnp.dot`` / ``jnp.einsum`` per the adaptive tile refiner.  The
+schedule is static per plan, so it runs identically under the per-slice
+path, the vmapped slice batch, and ``shard_map``.
+
 Distribution across devices lives in :mod:`repro.core.distributed`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import string
 from functools import partial
 from typing import Sequence
@@ -40,6 +50,20 @@ from .contraction_tree import ContractionTree
 from .tensor_network import TensorNetwork, bits
 
 _LETTERS = string.ascii_letters
+
+BACKENDS = ("einsum", "gemm")
+
+
+def default_backend() -> str:
+    """Execution backend when none is requested: the ``REPRO_BACKEND``
+    environment variable (CI runs the tier-1 gate under both values) or
+    the einsum oracle path."""
+    backend = os.environ.get("REPRO_BACKEND", "einsum")
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"REPRO_BACKEND={backend!r} not in {BACKENDS}"
+        )
+    return backend
 
 
 def pair_contract_inds(
@@ -129,16 +153,33 @@ class _Step:
     rhs: int
     out: int
     expr: str
+    inds_lhs: tuple = ()
+    inds_rhs: tuple = ()
+    inds_out: tuple = ()
 
 
 class ContractionPlan:
-    """Compiled sliced-contraction program for one (tree, S) pair."""
+    """Compiled sliced-contraction program for one (tree, S) pair.
 
-    def __init__(self, tree: ContractionTree, smask: int = 0):
+    ``backend="gemm"`` additionally lowers every step through
+    :mod:`repro.lowering` into a refined kernel schedule (``self.
+    schedule``); ``backend=None`` resolves via :func:`default_backend`.
+    ``dtype`` only informs the refiner's cost model / backend choice —
+    execution adapts to the concrete arrays it is handed.
+    """
+
+    def __init__(
+        self,
+        tree: ContractionTree,
+        smask: int = 0,
+        backend: str | None = None,
+        dtype=jnp.complex64,
+    ):
         self.tree = tree
         tn = tree.tn
         self.tn = tn
         space = tn.space
+        self.smask = smask
         self.sliced_bits = list(bits(smask))
         self.num_sliced = len(self.sliced_bits)
         slicepos = {b: i for i, b in enumerate(self.sliced_bits)}
@@ -165,13 +206,32 @@ class ContractionPlan:
             _, out = pair_contract_inds(node_inds[l], node_inds[r], open_set)
             expr = einsum_expr(node_inds[l], node_inds[r], out)
             node_inds[v] = out
-            self.steps.append(_Step(l, r, v, expr))
+            self.steps.append(
+                _Step(l, r, v, expr, node_inds[l], node_inds[r], out)
+            )
         self.root = tree.root
         raw_out = node_inds[self.root]
         # canonicalize: output axes follow tn.open_inds declaration order
         want = tuple(ix for ix in tn.open_inds if ix in raw_out)
         self.out_perm = tuple(raw_out.index(ix) for ix in want)
         self.out_inds = want if want else raw_out
+
+        self.backend = backend if backend is not None else default_backend()
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        self.dtype = jnp.dtype(dtype)
+        self.schedule = None
+        if self.backend == "gemm":
+            from ..lowering import refine_schedule  # lazy: avoid cycle
+
+            self.schedule = refine_schedule(
+                [(s.inds_lhs, s.inds_rhs, s.inds_out) for s in self.steps],
+                tn.size_of,
+                dtype=self.dtype,
+            )
+        # memoized jitted executables (plan-lifetime — a cached plan
+        # served twice skips retracing, not just re-planning)
+        self._compiled: dict = {}
 
     # ------------------------------------------------------------------
     @property
@@ -210,9 +270,16 @@ class ContractionPlan:
                     a, svals[spos], axis=axis, keepdims=False
                 )
             env[i] = a
-        for st in self.steps:
-            env[st.out] = jnp.einsum(st.expr, env[st.lhs], env[st.rhs])
-            del env[st.lhs], env[st.rhs]
+        if self.schedule is None:
+            for st in self.steps:
+                env[st.out] = jnp.einsum(st.expr, env[st.lhs], env[st.rhs])
+                del env[st.lhs], env[st.rhs]
+        else:
+            from ..lowering import gemm_form  # lazy: avoid cycle
+
+            for st, spec in zip(self.steps, self.schedule.specs):
+                env[st.out] = gemm_form.apply(spec, env[st.lhs], env[st.rhs])
+                del env[st.lhs], env[st.rhs]
         out = env[self.root]
         if self.out_perm and self.out_perm != tuple(range(out.ndim)):
             out = jnp.transpose(out, self.out_perm)
@@ -229,26 +296,40 @@ class ContractionPlan:
         ``lax.scan`` so peak memory is bounded."""
         n_slices = 1 << self.num_sliced
         if self.num_sliced == 0:
-            return jax.jit(lambda a: self.contract_slice(a, 0))(list(arrays))
+            key = ("dense",)
+            # setdefault: concurrent serving threads race to publish, but
+            # all end up calling the one surviving jitted fn (single trace)
+            fn = self._compiled.get(key) or self._compiled.setdefault(
+                key, jax.jit(lambda a: self.contract_slice(a, 0))
+            )
+            return fn(list(arrays))
         slice_batch = min(slice_batch, n_slices)
         assert n_slices % slice_batch == 0
-        ids = jnp.arange(n_slices, dtype=jnp.int32).reshape(-1, slice_batch)
-
-        @jax.jit
-        def run(arrs):
-            batched = jax.vmap(lambda sid: self.contract_slice(arrs, sid))
-
-            def body(acc, chunk):
-                return acc + jnp.sum(batched(chunk), axis=0), None
-
-            out_shape = jax.eval_shape(
-                lambda: jnp.sum(batched(ids[0]), axis=0)
+        key = ("all", slice_batch)
+        fn = self._compiled.get(key)
+        if fn is None:
+            ids = jnp.arange(n_slices, dtype=jnp.int32).reshape(
+                -1, slice_batch
             )
-            acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
-            acc, _ = jax.lax.scan(body, acc0, ids)
-            return acc
 
-        return run(list(arrays))
+            @jax.jit
+            def run(arrs):
+                batched = jax.vmap(
+                    lambda sid: self.contract_slice(arrs, sid)
+                )
+
+                def body(acc, chunk):
+                    return acc + jnp.sum(batched(chunk), axis=0), None
+
+                out_shape = jax.eval_shape(
+                    lambda: jnp.sum(batched(ids[0]), axis=0)
+                )
+                acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
+                acc, _ = jax.lax.scan(body, acc0, ids)
+                return acc
+
+            fn = self._compiled.setdefault(key, run)
+        return fn(list(arrays))
 
 
 def contract_dense(

@@ -1,0 +1,35 @@
+"""GEMM lowering subsystem: contraction trees → executable kernel schedules.
+
+The paper's Sec. V pipeline on Sunway is  *contraction → fused GEMM →
+adaptive path refiner → kernel schedule*; this package is the TPU/Pallas
+port of that bridge between the planner and the kernels:
+
+  gemm_form — normalize each pairwise contraction into
+              transpose→reshape→GEMM→reshape form (batch/M/N/K index
+              classification; open sampling indices ride as batch axes,
+              sliced indices are fixed before lowering)
+  refiner   — the Sec. V-B adaptive refiner for TPU: per-node backend
+              choice (Pallas tiled_matmul / jnp.dot / jnp.einsum),
+              MXU-128-snapped block shapes, pad-vs-split decisions, and
+              the per-node cost model fed back into PlanReport
+  cache     — compiled-plan LRU keyed by a canonical network
+              fingerprint (structure + dtype + open indices + planner
+              params), so repeated requests for the same circuit family
+              skip planning and retracing
+
+Sunway→TPU mapping of the refiner, for the record: SWTT 8×8 fused-GEMM
+kernel quantization → MXU 128×128 tile quantization; LDM residency →
+VMEM residency budget; DMA-bandwidth roofline → HBM roofline;
+fp16-compute/fp32-accumulate → bf16/fp32 ``preferred_element_type``;
+the permute-or-pad index rewrite → per-node pad-vs-split block choice.
+"""
+
+from .cache import PLAN_CACHE, PlanCache, PlanEntry, network_fingerprint  # noqa: F401
+from .gemm_form import GemmForm, apply, lower_step  # noqa: F401
+from .refiner import (  # noqa: F401
+    GemmSpec,
+    LoweredSchedule,
+    modeled_step_time,
+    refine_schedule,
+    refine_step,
+)

@@ -1,0 +1,117 @@
+"""Compiled-plan cache — the first serving-scale primitive.
+
+Planning an RQC contraction (pathfinding, slicing, tuning, merging,
+lowering) costs seconds while executing one slice costs milliseconds, so
+a serving deployment that re-plans per request wastes almost all of its
+wall time.  Production circuit families are *structurally* repetitive:
+two amplitude requests for the same circuit with different bitstrings
+produce tensor networks that differ only in leaf values, never in
+structure.  This module keys a cache on that structure:
+
+  * :func:`network_fingerprint` canonicalizes a
+    :class:`~repro.core.tensor_network.TensorNetwork` by renaming every
+    index to its first-appearance ordinal (so arbitrary user labels hash
+    identically), then SHA-256s the structure + per-index sizes + open
+    indices + array dtype;
+  * a :class:`PlanCache` (thread-safe LRU) maps
+    ``(fingerprint, planner/lowering parameters)`` to the fully planned
+    artifact: the tree, the slicing mask ``S``, the refined
+    :class:`~repro.lowering.refiner.LoweredSchedule`, and the live
+    ``ContractionPlan`` object — whose memoized jitted executables ride
+    along, so a cache hit skips planning *and* retracing.
+
+The slicing mask is part of the cached value rather than the key because
+``S`` is a deterministic function of (structure, planner parameters);
+including the planner parameters in the key therefore pins ``S`` exactly
+as the schedule was refined for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import threading
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+def network_fingerprint(tn, dtype=None, extra: tuple = ()) -> str:
+    """Canonical SHA-256 fingerprint of a tensor network's structure.
+
+    Invariant under index relabeling: labels are replaced by their
+    first-appearance ordinal scanning ``tn.inputs`` in order.  ``extra``
+    lets callers fold planner parameters into the digest.
+    """
+    rename: dict[Hashable, int] = {}
+
+    def rid(ix) -> int:
+        if ix not in rename:
+            rename[ix] = len(rename)
+        return rename[ix]
+
+    structure = tuple(tuple(rid(ix) for ix in t) for t in tn.inputs)
+    open_ids = tuple(rid(ix) for ix in tn.open_inds)
+    sizes = tuple(tn.size_of(ix) for ix in rename)
+    payload = repr((structure, open_ids, sizes, str(dtype), extra))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """Cached planning artifact for one (network family, params) key."""
+
+    plan: Any  # ContractionPlan (carries tree, smask, schedule, jit cache)
+    report: Any  # PlanReport template from the original planning run
+
+
+class PlanCache:
+    """Thread-safe LRU cache of compiled contraction plans."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._entries: OrderedDict[str, PlanEntry] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str) -> PlanEntry | None:
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return ent
+
+    def put(self, key: str, entry: PlanEntry) -> None:
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "size": len(self._entries),
+                "maxsize": self.maxsize,
+                "hits": self.hits,
+                "misses": self.misses,
+            }
+
+
+#: process-global cache used by :mod:`repro.core.api`
+PLAN_CACHE = PlanCache(
+    maxsize=int(os.environ.get("REPRO_PLAN_CACHE_SIZE", "64"))
+)

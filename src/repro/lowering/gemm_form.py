@@ -1,0 +1,191 @@
+"""GEMM normalization: pairwise contraction → transpose/reshape/GEMM form.
+
+The paper's Sec. V-A observation is that every stem contraction *is* a
+GEMM once its indices are classified; the Sunway runtime rewrites each
+pairwise contraction into a fused transpose→GEMM so the hot loop never
+executes a generic einsum.  This module is the TPU analogue of that
+rewrite: given the (ordered) index tuples of one contraction step it
+classifies every index into one of four GEMM roles,
+
+  batch  — shared by both operands AND kept in the output (open sampling
+           indices that ride through both children; lowered as the
+           leading batch axis of a batched GEMM),
+  M      — kept indices exclusive to the left operand,
+  N      — kept indices exclusive to the right operand,
+  K      — contracted indices (shared, absent from the output),
+
+and emits a static :class:`GemmForm`: two input permutations, the
+(B, M, K) / (B, K, N) collapse shapes, and the output permutation that
+restores the executor's index-order convention.  Sliced indices never
+reach this layer — the executor fixes them on the leaf arrays before any
+step runs — so a slicing mask ``S`` only shrinks the shapes seen here
+(the "sliced indices as fixed axes" half of the paper's rewrite).
+
+:func:`apply` executes a refined step (:class:`~repro.lowering.refiner.
+GemmSpec`) inside the jitted slice program.  Complex operands on the
+Pallas backend route through the 3-real-GEMM Karatsuba in
+:mod:`repro.kernels.ops`; tiny/degenerate nodes keep the original einsum
+string so lowering is total over arbitrary trees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Hashable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def real_component_bytes(dtype) -> int:
+    """Byte width of one real component (complex64 → 4, complex128 → 8).
+
+    The single source of the Pallas-safety policy: components wider than
+    4 bytes must not run through the fp32-accumulating kernel — the
+    refiner routes them off Pallas at plan time and :func:`apply`
+    re-checks the concrete arrays at trace time.
+    """
+    dt = jnp.dtype(dtype)
+    return (
+        dt.itemsize // 2 if jnp.issubdtype(dt, jnp.complexfloating)
+        else dt.itemsize
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmForm:
+    """Static lowering of one pairwise contraction to batched-GEMM form."""
+
+    inds_a: tuple
+    inds_b: tuple
+    inds_out: tuple
+    batch_inds: tuple
+    m_inds: tuple
+    n_inds: tuple
+    k_inds: tuple
+    perm_a: tuple[int, ...]  # a axes → (batch..., m..., k...)
+    perm_b: tuple[int, ...]  # b axes → (batch..., k..., n...)
+    out_perm: tuple[int, ...]  # (batch..., m..., n...) → inds_out order
+    batch_shape: tuple[int, ...]
+    m_shape: tuple[int, ...]
+    n_shape: tuple[int, ...]
+    k_shape: tuple[int, ...]
+    expr: str  # einsum fallback for the same step
+
+    @property
+    def B(self) -> int:
+        return math.prod(self.batch_shape)
+
+    @property
+    def M(self) -> int:
+        return math.prod(self.m_shape)
+
+    @property
+    def N(self) -> int:
+        return math.prod(self.n_shape)
+
+    @property
+    def K(self) -> int:
+        return math.prod(self.k_shape)
+
+    @property
+    def flops(self) -> float:
+        """Real-valued multiply-add count of the un-padded GEMM."""
+        return 2.0 * self.B * self.M * self.N * self.K
+
+
+def lower_step(
+    inds_a: Sequence[Hashable],
+    inds_b: Sequence[Hashable],
+    inds_out: Sequence[Hashable],
+    size_of: Callable[[Hashable], int],
+) -> GemmForm:
+    """Classify one pairwise contraction into GEMM roles.
+
+    ``inds_out`` must follow the executor's convention (kept indices of
+    ``a`` in order, then kept indices of ``b`` not already present), i.e.
+    the output of :func:`repro.core.executor.pair_contract_inds`.
+    """
+    set_a, set_b = set(inds_a), set(inds_b)
+    out_set = set(inds_out)
+    batch = tuple(ix for ix in inds_a if ix in set_b and ix in out_set)
+    k_inds = tuple(ix for ix in inds_a if ix in set_b and ix not in out_set)
+    m_inds = tuple(ix for ix in inds_a if ix not in set_b)
+    n_inds = tuple(ix for ix in inds_b if ix not in set_a)
+
+    pos_a = {ix: i for i, ix in enumerate(inds_a)}
+    pos_b = {ix: i for i, ix in enumerate(inds_b)}
+    perm_a = tuple(pos_a[ix] for ix in batch + m_inds + k_inds)
+    perm_b = tuple(pos_b[ix] for ix in batch + k_inds + n_inds)
+
+    natural = batch + m_inds + n_inds
+    if set(natural) != out_set or len(natural) != len(inds_out):
+        raise ValueError(
+            f"output {inds_out!r} is not a permutation of batch+M+N "
+            f"{natural!r}"
+        )
+    nat_pos = {ix: i for i, ix in enumerate(natural)}
+    out_perm = tuple(nat_pos[ix] for ix in inds_out)
+
+    from ..core.executor import einsum_expr  # shared labeling convention
+
+    return GemmForm(
+        inds_a=tuple(inds_a),
+        inds_b=tuple(inds_b),
+        inds_out=tuple(inds_out),
+        batch_inds=batch,
+        m_inds=m_inds,
+        n_inds=n_inds,
+        k_inds=k_inds,
+        perm_a=perm_a,
+        perm_b=perm_b,
+        out_perm=out_perm,
+        batch_shape=tuple(size_of(ix) for ix in batch),
+        m_shape=tuple(size_of(ix) for ix in m_inds),
+        n_shape=tuple(size_of(ix) for ix in n_inds),
+        k_shape=tuple(size_of(ix) for ix in k_inds),
+        expr=einsum_expr(inds_a, inds_b, inds_out),
+    )
+
+
+def apply(spec, a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
+    """Execute one refined step (``spec`` is a refiner ``GemmSpec``).
+
+    Trace-safe: shapes and the backend choice are static, so this runs
+    unchanged under ``jit``, the executor's slice-batch ``vmap``, and
+    ``shard_map``.
+    """
+    form: GemmForm = spec.form
+    if spec.backend == "einsum":
+        return jnp.einsum(form.expr, a, b)
+    a2 = jnp.transpose(a, form.perm_a).reshape(form.B, form.M, form.K)
+    b2 = jnp.transpose(b, form.perm_b).reshape(form.B, form.K, form.N)
+    real_bytes = real_component_bytes(jnp.result_type(a2.dtype, b2.dtype))
+    if spec.backend == "dot" or (spec.backend == "pallas" and real_bytes > 4):
+        # 64-bit components handed to a schedule refined for a narrower
+        # dtype would be silently truncated by the fp32 Pallas
+        # accumulator — keep them on XLA's full-precision dot.
+        out = jnp.matmul(a2, b2)
+    elif spec.backend == "pallas":
+        from ..kernels import ops
+
+        mm = functools.partial(
+            ops.matmul,
+            bm=spec.bm,
+            bn=spec.bn,
+            bk=spec.bk,
+            interpret=interpret,
+            min_kernel_dim=1,  # the refiner already gated tiny shapes out
+        )
+        if form.B > 1:
+            out = jax.vmap(mm)(a2, b2)
+        else:
+            out = mm(a2[0], b2[0])[None]
+    else:
+        raise ValueError(f"unknown lowering backend {spec.backend!r}")
+    out = out.reshape(form.batch_shape + form.m_shape + form.n_shape)
+    if form.out_perm != tuple(range(out.ndim)):
+        out = jnp.transpose(out, form.out_perm)
+    return out

@@ -1,0 +1,202 @@
+"""Adaptive tile refiner — the paper's Sec. V-B path refiner mapped to TPU.
+
+On Sunway the refiner permutes/splits contraction indices until every
+stem GEMM matches the SWTT fused-kernel tile requirements (8×8 kernels,
+DMA-bandwidth roofline).  The TPU analogue implemented here makes three
+per-node decisions over the normalized :class:`~repro.lowering.gemm_form.
+GemmForm` of every contraction step:
+
+  1. **backend** — Pallas ``tiled_matmul`` for MXU-sized GEMMs,
+     ``jnp.dot`` (XLA batched dot_general) for sub-tile shapes where
+     kernel padding would dominate, plain ``jnp.einsum`` for tiny or
+     degenerate nodes where even the transpose/reshape plumbing costs
+     more than the contraction;
+  2. **block shapes** — (bm, bn, bk) snapped to multiples of the 128-wide
+     MXU tile, chosen per node from a candidate ladder under the VMEM
+     residency budget;
+  3. **pad-vs-split** — for each candidate the model charges the padded
+     FLOPs ``ceil(M/bm)·ceil(N/bn)·ceil(K/bk)`` tiles actually execute;
+     picking a smaller block *splits* the GEMM into more, fuller tiles
+     while a larger block *pads* — the candidate with the lower modeled
+     time wins (the Sunway refiner's permute-or-pad choice).
+
+The same per-node cost model (tile quantization capped by the HBM
+roofline, complex traffic counted as Karatsuba's 3 real GEMMs) is summed
+into ``LoweredSchedule.modeled_time_s``, which the API layer feeds back
+into ``PlanReport.modeled_time_s`` so planner metrics reflect the
+schedule that will actually execute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Hashable, Sequence
+
+import jax.numpy as jnp
+
+from ..core.merging import TPU_HBM_BW, TPU_MXU, TPU_PEAK_FLOPS
+from .gemm_form import GemmForm, lower_step, real_component_bytes
+
+# candidate Pallas block edges (multiples of the MXU tile)
+BLOCK_CANDIDATES = (128, 256, 512)
+# VMEM residency budget for one (bm×bk + bk×bn + bm×bn) working set, fp32
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+# below this many real FLOPs a node stays on einsum — the reshape/
+# transpose plumbing would cost more than the contraction itself
+EINSUM_FLOPS_FLOOR = 2.0 ** 16
+# effective peak for non-MXU lowerings (XLA dot_general / einsum on
+# sub-tile shapes): mostly VPU + permute work, modeled at peak/8
+NON_MXU_PEAK_FRACTION = 0.125
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """Refined, executable lowering of one contraction step."""
+
+    form: GemmForm
+    backend: str  # "pallas" | "dot" | "einsum"
+    bm: int
+    bn: int
+    bk: int
+    modeled_time_s: float
+    pad_waste: float  # fraction of executed MXU FLOPs that are padding
+
+
+def _ceil_to(x: float, t: int) -> float:
+    return max(t, math.ceil(x / t) * t)
+
+
+def _real_gemm_count(dtype, backend: str) -> int:
+    """Real GEMMs per logical GEMM: Karatsuba runs 3, a naive complex
+    product runs 4, real dtypes run 1."""
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.complexfloating):
+        return 1
+    return 3 if backend == "pallas" else 4
+
+
+def modeled_step_time(
+    form: GemmForm, dtype, backend: str, bm: int, bn: int, bk: int
+) -> tuple[float, float]:
+    """(seconds, pad_waste) for one execution of this step.
+
+    Pallas is charged padded-tile FLOPs at full MXU peak; dot/einsum are
+    charged exact FLOPs at the non-MXU effective peak.  Both are capped
+    by the HBM roofline on the operand + output traffic.
+    """
+    n_real = _real_gemm_count(dtype, backend)
+    flops = form.flops * n_real
+    itemsize = jnp.dtype(dtype).itemsize
+    traffic = itemsize * form.B * (
+        form.M * form.K + form.K * form.N + form.M * form.N
+    )
+    t_mem = traffic / TPU_HBM_BW
+    if backend == "pallas":
+        padded = (
+            2.0
+            * form.B
+            * _ceil_to(form.M, bm)
+            * _ceil_to(form.N, bn)
+            * _ceil_to(form.K, bk)
+            * n_real
+        )
+        t_compute = padded / TPU_PEAK_FLOPS
+        waste = 1.0 - flops / padded
+    else:
+        t_compute = flops / (TPU_PEAK_FLOPS * NON_MXU_PEAK_FRACTION)
+        waste = 0.0
+    return max(t_compute, t_mem), waste
+
+
+def refine_step(
+    form: GemmForm,
+    dtype,
+    *,
+    min_kernel_dim: int = TPU_MXU,
+) -> GemmSpec:
+    """Pick backend + block shapes for one normalized contraction step."""
+    real_bytes = real_component_bytes(dtype)
+    if form.flops < EINSUM_FLOPS_FLOOR:
+        t, w = modeled_step_time(form, dtype, "einsum", 1, 1, 1)
+        return GemmSpec(form, "einsum", 0, 0, 0, t, w)
+    # 64-bit components (float64 / complex128) would be silently
+    # truncated by the fp32 Pallas accumulator — keep them on XLA's dot.
+    if min(form.M, form.N, form.K) < min_kernel_dim or real_bytes > 4:
+        t, w = modeled_step_time(form, dtype, "dot", 1, 1, 1)
+        return GemmSpec(form, "dot", 0, 0, 0, t, w)
+    best: GemmSpec | None = None
+    for bm in BLOCK_CANDIDATES:
+        for bn in BLOCK_CANDIDATES:
+            for bk in BLOCK_CANDIDATES:
+                if 4 * (bm * bk + bk * bn + bm * bn) > VMEM_BUDGET_BYTES:
+                    continue  # working set must stay VMEM-resident
+                t, w = modeled_step_time(form, dtype, "pallas", bm, bn, bk)
+                if best is None or t < best.modeled_time_s:
+                    best = GemmSpec(form, "pallas", bm, bn, bk, t, w)
+    return best
+
+
+@dataclasses.dataclass
+class LoweredSchedule:
+    """Refined kernel schedule for every step of a ContractionPlan."""
+
+    specs: list[GemmSpec]
+    dtype: str
+
+    @property
+    def modeled_time_s(self) -> float:
+        """Modeled seconds for one slice (sum over steps)."""
+        return sum(s.modeled_time_s for s in self.specs)
+
+    def backend_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for s in self.specs:
+            counts[s.backend] = counts.get(s.backend, 0) + 1
+        return counts
+
+    def pad_waste(self) -> float:
+        """FLOPs-weighted padding fraction across the Pallas nodes."""
+        useful = padded = 0.0
+        for s in self.specs:
+            if s.backend != "pallas":
+                continue
+            f = s.form.flops
+            useful += f
+            padded += f / (1.0 - s.pad_waste) if s.pad_waste < 1.0 else f
+        return 0.0 if padded == 0.0 else 1.0 - useful / padded
+
+    def summary(self) -> dict:
+        return {
+            "nodes": len(self.specs),
+            "backends": self.backend_counts(),
+            "pad_waste": self.pad_waste(),
+            "modeled_time_s": self.modeled_time_s,
+            "dtype": self.dtype,
+        }
+
+    def summary_row(self) -> str:
+        c = self.backend_counts()
+        per = " ".join(f"{k}={c[k]}" for k in ("pallas", "dot", "einsum") if k in c)
+        return (
+            f"lowered[{self.dtype}]: {len(self.specs)} nodes ({per}) "
+            f"pad_waste={self.pad_waste()*100:.1f}% "
+            f"t_model={self.modeled_time_s:.3e}s/slice"
+        )
+
+
+def refine_schedule(
+    steps: Sequence[tuple[Sequence, Sequence, Sequence]],
+    size_of: Callable[[Hashable], int],
+    dtype=jnp.complex64,
+    *,
+    min_kernel_dim: int = TPU_MXU,
+) -> LoweredSchedule:
+    """Lower + refine every ``(inds_a, inds_b, inds_out)`` step."""
+    specs = [
+        refine_step(
+            lower_step(ia, ib, io, size_of), dtype,
+            min_kernel_dim=min_kernel_dim,
+        )
+        for ia, ib, io in steps
+    ]
+    return LoweredSchedule(specs, str(jnp.dtype(dtype)))

@@ -44,6 +44,10 @@ def contract_amplitude_batch(
     ``mesh=None`` uses the single-host vmapped executor; with a mesh the
     slice ids are sharded over ``axis_names`` (shard_map + one psum) and the
     open-batch axes ride inside each device's accumulator unchanged.
+
+    Backend-agnostic: a plan built with ``backend="gemm"`` carries its
+    lowered kernel schedule (open indices lowered as GEMM batch axes, see
+    :mod:`repro.lowering`) and executes it on both paths.
     """
     from ..core.executor import auto_slice_batch
 
