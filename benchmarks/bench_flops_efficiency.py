@@ -15,10 +15,6 @@ Three views:
 
 from __future__ import annotations
 
-import json
-import os
-import time
-
 import numpy as np
 
 from repro.core.executor import ContractionPlan
@@ -31,7 +27,7 @@ from repro.core.pathfinder import random_greedy_tree
 from repro.core.slicing import find_slices
 from repro.core.merging import TPU_PEAK_FLOPS, SUNWAY_PEAK_FLOPS
 
-from .common import network_for, timer
+from .common import append_trajectory, network_for, timer
 
 
 def modeled_efficiency(tree, S, surface: str, slice_fused: bool = False) -> float:
@@ -127,25 +123,7 @@ def backend_comparison(
             rec["schedule"] = plan.schedule.summary()
         record["backends"][backend] = rec
     record["gemm_over_einsum"] = walls["gemm"] / walls["einsum"]
-    os.makedirs(trajectory_dir, exist_ok=True)
-    path = os.path.join(trajectory_dir, "trajectory.json")
-    trajectory = {"records": []}
-    if os.path.exists(path):
-        try:
-            with open(path) as f:
-                loaded = json.load(f)
-            if isinstance(loaded, dict) and isinstance(
-                loaded.get("records"), list
-            ):
-                trajectory = loaded
-        except (json.JSONDecodeError, OSError):
-            pass  # corrupt/unreadable trajectory: start fresh
-    record["unix_time"] = time.time()
-    trajectory["records"].append(record)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(trajectory, f, indent=2)
-    os.replace(tmp, path)  # atomic: an interrupted run can't truncate
+    append_trajectory([record], trajectory_dir)
     sched = record["backends"]["gemm"].get("schedule", {})
     counts = ";".join(
         f"{k}={v}" for k, v in sorted(sched.get("backends", {}).items())

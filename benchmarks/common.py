@@ -4,6 +4,8 @@ is identical at any scale; its inputs are graphs, not arrays)."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 from repro.core.contraction_tree import ContractionTree
@@ -50,3 +52,32 @@ def timer(fn, *args, repeat: int = 1, **kw):
         out = fn(*args, **kw)
         best = min(best, time.perf_counter() - t0)
     return out, best
+
+
+def append_trajectory(records: list[dict], trajectory_dir: str) -> None:
+    """Append timestamped records to ``<trajectory_dir>/trajectory.json``
+    (the per-subsystem benchmark history rendered by ``make_tables``).
+
+    Tolerates a missing/corrupt file and writes atomically (tmp +
+    ``os.replace``) so an interrupted run can't truncate the history."""
+    os.makedirs(trajectory_dir, exist_ok=True)
+    path = os.path.join(trajectory_dir, "trajectory.json")
+    trajectory = {"records": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                loaded = json.load(f)
+            if isinstance(loaded, dict) and isinstance(
+                loaded.get("records"), list
+            ):
+                trajectory = loaded
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt/unreadable trajectory: start fresh
+    now = time.time()
+    for r in records:
+        r.setdefault("unix_time", now)
+    trajectory["records"].extend(records)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(trajectory, f, indent=2)
+    os.replace(tmp, path)

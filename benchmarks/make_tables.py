@@ -1,9 +1,11 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
 experiments/dryrun/*.json, plus the §Sampling throughput table when
 ``benchmarks.bench_sampling_throughput --json`` output is present under
-experiments/sampling/, and the §Lowering backend table from the
-trajectory records ``benchmarks.bench_flops_efficiency`` appends under
-experiments/lowering/.
+experiments/sampling/, the §Lowering backend table from the trajectory
+records ``benchmarks.bench_flops_efficiency`` appends under
+experiments/lowering/, and the §Hoisting table (naive vs two-phase
+sliced execution) from the records ``benchmarks.bench_slicing_overhead``
+appends under experiments/hoisting/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -122,6 +124,50 @@ def print_lowering_table(lowering_dir="experiments/lowering") -> None:
         )
 
 
+def print_hoisting_table(hoisting_dir="experiments/hoisting") -> None:
+    """§Hoisting rows: naive (full tree per slice, Eq. 4) vs two-phase
+    lifetime-partitioned execution, one row per trajectory record."""
+    paths = sorted(glob.glob(os.path.join(hoisting_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        rows.extend(rec.get("records", []))
+    if not rows:
+        return
+    print("\n### Two-phase sliced execution "
+          "(slice-invariant hoisting vs naive, Eq. 4)\n")
+    print("| workload | backend | slices | inv. nodes | naive ov (Eq. 4) | "
+          "hoisted ov | scan wall (naive / hoisted warm) | "
+          "per-slice wall (naive / hoisted) | per-slice speedup |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        inv = (
+            f"{r['invariant_nodes']}/{r['total_nodes']}"
+            if "invariant_nodes" in r else "-"
+        )
+        wall_scan = (
+            f"{fmt_s(r['wall_naive_s'])} / {fmt_s(r['wall_hoisted_warm_s'])}"
+            if r.get("wall_naive_s") is not None else "-"
+        )
+        wall_ps = (
+            f"{fmt_s(r['wall_perslice_naive_s'])} / "
+            f"{fmt_s(r['wall_perslice_hoisted_s'])}"
+            if r.get("wall_perslice_naive_s") is not None else "-"
+        )
+        speed = r.get("speedup_perslice")
+        print(
+            f"| {r.get('workload', '-')} "
+            f"| {r.get('backend', 'modeled')} "
+            f"| {1 << r.get('num_sliced', 0)} "
+            f"| {inv} "
+            f"| {r.get('naive_overhead', float('nan')):.3f} "
+            f"| {r.get('hoisted_overhead', float('nan')):.3f} "
+            f"| {wall_scan} | {wall_ps} "
+            f"| {'-' if speed is None else f'{speed:.2f}×'} |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -173,6 +219,7 @@ def main() -> None:
             )
     print_sampling_table()
     print_lowering_table()
+    print_hoisting_table()
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ from .contraction_tree import ContractionTree  # noqa: F401
 from .executor import (  # noqa: F401
     ContractionPlan,
     default_backend,
+    default_hoist,
     simplify_network,
 )
 from .lifetime import Stem, detect_stem  # noqa: F401

@@ -25,6 +25,7 @@ from .executor import (
     ContractionPlan,
     auto_slice_batch,
     default_backend,
+    default_hoist,
     simplify_network,
 )
 from .lifetime import detect_stem
@@ -55,6 +56,11 @@ class PlanReport:
     cache_misses: int = 0
     lowered_backends: dict | None = None  # node counts per kernel backend
     pad_waste: float = 0.0  # FLOPs-weighted MXU padding fraction
+    # two-phase (lifetime-partitioned) execution metrics (PR 3)
+    hoist: bool = True  # whether two-phase execution is enabled
+    invariant_fraction: float = 0.0  # share of C(B) hoisted out of slices
+    measured_overhead: float = 1.0  # executed-FLOPs overhead of the mode
+    modeled_time_hoisted_s: float = 0.0  # Sec. V model under hoisting
 
     def row(self) -> str:
         row = (
@@ -64,6 +70,12 @@ class PlanReport:
             f"t_model={self.modeled_time_s:.3e}s plan={self.plan_wall_s:.2f}s "
             f"backend={self.backend}"
         )
+        if self.num_sliced:
+            row += (
+                f" hoist={'on' if self.hoist else 'off'}"
+                f"[inv={self.invariant_fraction:.2f}"
+                f" ov={self.measured_overhead:.3f}]"
+            )
         if self.cache_hit:
             row += " cache=hit"
         if self.lowered_backends:
@@ -106,6 +118,17 @@ def plan_contraction(
         smask = find_slices(tree, target_dim, method=method, seed=seed)
     tree = orient_gemms(tree)
     wall = time.perf_counter() - t0
+    naive_overhead = tree.slicing_overhead(smask)
+    hoist_on = default_hoist()
+    invariant_fraction = 0.0
+    hoisted_overhead = naive_overhead
+    if smask:
+        from ..lowering.partition import partition_tree  # lazy: cycle
+
+        part = partition_tree(tree, smask)
+        invariant_fraction = part.invariant_fraction
+        hoisted_overhead = part.hoisted_overhead()
+    modeled = modeled_tree_time(tree, smask)
     report = PlanReport(
         num_tensors=tn.num_tensors,
         width_before=width0,
@@ -113,9 +136,13 @@ def plan_contraction(
         log2_cost=tree.log2_total_cost(),
         log2_sliced_cost=math.log2(tree.sliced_cost(smask)),
         num_sliced=popcount(smask),
-        slicing_overhead=tree.slicing_overhead(smask),
-        modeled_time_s=modeled_tree_time(tree, smask),
+        slicing_overhead=naive_overhead,
+        modeled_time_s=modeled,
         plan_wall_s=wall,
+        hoist=hoist_on,
+        invariant_fraction=invariant_fraction,
+        measured_overhead=hoisted_overhead if hoist_on else naive_overhead,
+        modeled_time_hoisted_s=modeled * hoisted_overhead / naive_overhead,
     )
     return tree, smask, report
 
@@ -160,12 +187,18 @@ def plan_compiled(
         ent = PLAN_CACHE.get(key)
         if ent is not None:
             stats = PLAN_CACHE.stats()
+            # hoist mode is an execution-time choice (REPRO_HOIST may have
+            # changed since the plan was cached): re-derive it so the
+            # report describes the mode that will actually run
+            hoist_on = default_hoist()
             report = dataclasses.replace(
                 ent.report,
                 plan_wall_s=time.perf_counter() - t0,
                 cache_hit=True,
                 cache_hits=stats["hits"],
                 cache_misses=stats["misses"],
+                hoist=hoist_on,
+                measured_overhead=ent.plan.executed_overhead(hoist_on),
             )
             return ent.plan, report
     tree, smask, report = plan_contraction(
@@ -174,12 +207,23 @@ def plan_compiled(
     )
     plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
     report.backend = plan.backend
+    # re-derive the two-phase metrics from the plan's own partition so the
+    # report always describes the object that will execute
+    report.invariant_fraction = plan.invariant_fraction
+    report.measured_overhead = plan.executed_overhead(report.hoist)
     if plan.schedule is not None:
         # refiner feedback: the modeled time now reflects the refined
         # schedule that will actually execute (per-slice × slice count)
         report.modeled_time_s = plan.schedule.modeled_time_s * (
             1 << plan.num_sliced
         )
+        # hoisted variant: prologue specs run once, epilogue per slice
+        prologue_t = sum(
+            plan.schedule.specs[k].modeled_time_s for k in plan.prologue_idx
+        )
+        report.modeled_time_hoisted_s = prologue_t + (
+            plan.schedule.modeled_time_s - prologue_t
+        ) * (1 << plan.num_sliced)
         report.lowered_backends = plan.schedule.backend_counts()
         report.pad_waste = plan.schedule.pad_waste()
     report.plan_wall_s = time.perf_counter() - t0
@@ -205,14 +249,16 @@ def simulate_amplitude(
     slice_batch: int = 4,
     backend: str | None = None,
     use_cache: bool = True,
+    hoist: bool | None = None,
 ) -> SimulationResult:
     """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
 
     ``backend="gemm"`` executes the lowered kernel schedule (Pallas
     tiled GEMMs + refined fallbacks); the default follows
-    ``REPRO_BACKEND`` / ``"einsum"``.  Two calls on the same circuit
-    share one compiled plan via the plan cache (different bitstrings
-    change leaf *values*, never network structure).
+    ``REPRO_BACKEND`` / ``"einsum"``.  ``hoist`` selects two-phase
+    (slice-invariant hoisted) execution, default ``REPRO_HOIST``.  Two
+    calls on the same circuit share one compiled plan via the plan cache
+    (different bitstrings change leaf *values*, never network structure).
     """
     from ..quantum.circuits import circuit_to_network  # avoid import cycle
 
@@ -230,7 +276,13 @@ def simulate_amplitude(
         use_cache=use_cache,
     )
     sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
-    value = plan.contract_all(arrays, slice_batch=sb)
+    value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
+    if hoist is not None:
+        report = dataclasses.replace(
+            report,
+            hoist=bool(hoist),
+            measured_overhead=plan.executed_overhead(bool(hoist)),
+        )
     return SimulationResult(
         np.asarray(value), report, plan.tree, plan.smask, plan
     )
@@ -252,6 +304,7 @@ def sample_bitstrings(
     axis_names: tuple[str, ...] = ("data",),
     backend: str | None = None,
     use_cache: bool = True,
+    hoist: bool | None = None,
 ):
     """Draw correlated bitstring samples from one batched contraction —
     the paper's flagship workload (Sec. VI: 1M correlated Sycamore samples).
@@ -269,7 +322,10 @@ def sample_bitstrings(
     device returns the full batch.  ``backend="gemm"`` lowers the stem
     to the refined kernel schedule (see :mod:`repro.lowering`) and the
     compiled plan is cached per circuit family like
-    :func:`simulate_amplitude`.
+    :func:`simulate_amplitude`.  Under two-phase execution (``hoist``,
+    default ``REPRO_HOIST``) repeated sampler calls on the same batch
+    network reuse the hoisted slice-invariant stem via the prologue
+    cache.
 
     Returns a :class:`repro.sampling.SamplingResult`.
 
@@ -321,8 +377,15 @@ def sample_bitstrings(
         use_cache=use_cache,
     )
     amps = batch_mod.contract_amplitude_batch(
-        plan, arrays, slice_batch=slice_batch, mesh=mesh, axis_names=axis_names
+        plan, arrays, slice_batch=slice_batch, mesh=mesh,
+        axis_names=axis_names, hoist=hoist,
     )
+    if hoist is not None:
+        report = dataclasses.replace(
+            report,
+            hoist=bool(hoist),
+            measured_overhead=plan.executed_overhead(bool(hoist)),
+        )
     batch = AmplitudeBatch(amps, open_qubits, base_bitstring, n)
     idx = samplers.draw(batch, num_samples, sampler=sampler, seed=seed)
     flat = batch.flat()

@@ -6,6 +6,11 @@ required after the computation").  We express this jax-natively:
 
   * slice ids are sharded over the mesh's data-parallel axes via
     ``shard_map`` (each device scans its own chunk),
+  * the slice-invariant prologue of two-phase execution (see
+    :mod:`repro.lowering.partition`) is materialized once per process,
+    before the shard_map loop, and rides into every device's scan as a
+    replicated capture — devices only re-execute the slice-dependent
+    epilogue,
   * partial amplitudes are combined with a single ``psum`` — the paper's
     all-reduce,
   * within a slice, the contraction itself is an SPMD program, so a
@@ -38,6 +43,7 @@ def contract_sharded(
     mesh: Mesh,
     axis_names: tuple[str, ...] = ("data",),
     slice_batch: int = 1,
+    hoist: bool | None = None,
 ) -> jnp.ndarray:
     """Contract all slices with slice-parallelism over ``axis_names``.
 
@@ -51,43 +57,62 @@ def contract_sharded(
     is sharded — so the one psum returns the complete 2^k amplitude batch
     on every device.
 
+    Two-phase execution (``hoist``, default ``REPRO_HOIST``): the
+    slice-invariant prologue is materialized ONCE per process — before
+    the shard_map slice loop, not inside it — and the hoisted buffers
+    enter the worker as replicated captures, so each device's scan runs
+    only the slice-dependent epilogue.  Under the naive path every device
+    re-executes the full tree per slice.
+
     Plans built with ``backend="gemm"`` carry a lowered kernel schedule
     (:mod:`repro.lowering`); ``contract_slice`` threads that same static
     schedule through ``shard_map`` unchanged, so every device executes
     the identical refined Pallas/dot/einsum program per node.  The jitted
     shard_map program is memoized on the plan per (mesh, axis set, slice
-    batch) — repeated serving calls on a cached plan skip retracing.
+    batch, hoist mode) — repeated serving calls on a cached plan skip
+    retracing.
     """
+    from .executor import default_hoist
+
     ndev = 1
     for ax in axis_names:
         ndev *= mesh.shape[ax]
     n_slices = 1 << plan.num_sliced
     chunk = ndev * max(1, slice_batch)
     total = -(-n_slices // chunk) * chunk  # ceil to a multiple
-    # pad with repeats of slice 0 and a 0/1 validity weight
+    # pad with wrapped-around slice ids and a 0/1 validity weight
     ids = np.arange(total, dtype=np.int32) % n_slices
     valid = (np.arange(total) < n_slices).astype(np.complex64)
+
+    hoist = default_hoist() if hoist is None else bool(hoist)
+    hoist = hoist and plan.can_hoist
+    # invariant prologue: once per process, outside the slice loop
+    hoisted = plan.contract_prologue(arrays) if hoist else []
 
     from jax.experimental.shard_map import shard_map
 
     spec = P(axis_names)
 
     cache = getattr(plan, "_compiled", None)
-    key = ("sharded", mesh, tuple(axis_names), max(1, slice_batch))
+    key = ("sharded", mesh, tuple(axis_names), max(1, slice_batch), hoist)
     cached = cache.get(key) if cache is not None else None
     if cached is not None:
-        return cached(list(arrays), jnp.asarray(ids), jnp.asarray(valid))
+        return cached(
+            list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
+        )
 
     @jax.jit
-    def run(arrs, ids_, valid_):
+    def run(arrs, hbufs, ids_, valid_):
         def worker(ids_local, valid_local):
-            batched = jax.vmap(lambda sid: plan.contract_slice(arrs, sid))
+            # arrs/hbufs are closure captures: replicated on every device
+            contract = lambda sid: plan.contract_slice(  # noqa: E731
+                arrs, sid, hbufs if hoist else None
+            )
+            batched = jax.vmap(contract)
             idb = ids_local.reshape(-1, max(1, slice_batch))
             vb = valid_local.reshape(-1, max(1, slice_batch))
 
-            out_shape = jax.eval_shape(
-                lambda: plan.contract_slice(arrs, jnp.int32(0))
-            )
+            out_shape = jax.eval_shape(lambda: contract(jnp.int32(0)))
             wshape = (-1,) + (1,) * len(out_shape.shape)
 
             def body(acc, iv):
@@ -110,7 +135,9 @@ def contract_sharded(
     if cache is not None:
         # setdefault so concurrent threads converge on one jitted program
         run = cache.setdefault(key, run)
-    return run(list(arrays), jnp.asarray(ids), jnp.asarray(valid))
+    return run(
+        list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
+    )
 
 
 @dataclasses.dataclass
@@ -139,13 +166,27 @@ def contract_resumable(
     chunk: int = 4,
     state: SliceRangeCheckpoint | None = None,
     fail_on: set[int] | None = None,
+    hoist: bool | None = None,
 ):
     """Single-host resumable driver used by tests to demonstrate the
     checkpoint/restart contract of slice-level fault tolerance.
 
+    Unlike the vmapped scan (where XLA's loop-invariant code motion can
+    reclaim invariant recomputation on its own), each slice here is an
+    independent jit call, so two-phase execution (``hoist``, default
+    ``REPRO_HOIST``) is what keeps the prologue out of the per-slice
+    loop — it is materialized once and fed to every call.  A restart
+    re-derives it from the same leaf arrays (pure function), so the
+    checkpoint stays just the slice ranges + partial sum.
+
     ``fail_on``: slice-range starts that raise (simulated node failure) the
     first time they run.
     """
+    from .executor import default_hoist
+
+    hoist = default_hoist() if hoist is None else bool(hoist)
+    hoist = hoist and plan.can_hoist
+    hoisted = plan.contract_prologue(arrays) if hoist else []
     n_slices = 1 << plan.num_sliced
     if state is None:
         out_shape = jax.eval_shape(
@@ -156,8 +197,14 @@ def contract_resumable(
         )
     failed = set(fail_on or ())
 
-    contract = jax.jit(
-        lambda arrs, sid: plan.contract_slice(arrs, sid)
+    ck = ("resumable", hoist)
+    contract = plan._compiled.get(ck) or plan._compiled.setdefault(
+        ck,
+        jax.jit(
+            lambda arrs, hbufs, sid: plan.contract_slice(
+                arrs, sid, hbufs if hoist else None
+            )
+        ),
     )
     for s, e in state.missing(chunk):
         if s in failed:
@@ -165,7 +212,7 @@ def contract_resumable(
             raise RuntimeError(f"simulated failure in slice range [{s},{e})")
         acc = None
         for sid in range(s, e):
-            r = contract(list(arrays), jnp.int32(sid))
+            r = contract(list(arrays), list(hoisted), jnp.int32(sid))
             acc = r if acc is None else acc + r
         state.partial = state.partial + np.asarray(acc)
         state.done.add((s, e))

@@ -33,6 +33,31 @@ def lifetime_edges(tree: ContractionTree, bit: int) -> list[int]:
     return [v for v, em in tree.emask.items() if em & m]
 
 
+def lifetime_closure(tree: ContractionTree, smask: int) -> set[int]:
+    """Slice-dependent node set for a slicing mask ``S``: every tree node
+    (leaf or internal) whose subtree result depends on the bit assignment
+    of some index in ``smask``.
+
+    This is the upward closure (toward the root) of the union of the
+    sliced indices' lifetimes: by Thm. 1 each lifetime is the leaf-to-leaf
+    path between the index's two owners, and every ancestor of that path
+    inherits the dependence even after the index has been contracted away
+    inside the subtree.  The complement — nodes with no sliced index in
+    their lifetime-closure — is the slice-invariant prologue of two-phase
+    execution: those contractions are identical across all 2^|S| subtasks
+    and can be hoisted out of the slice loop (Sec. III, Eq. 4 — the
+    interpretable part of the slicing overhead)."""
+    dependent: set[int] = set()
+    for v, em in tree.emask.items():
+        if tree.is_leaf(v) and em & smask:
+            dependent.add(v)
+    for v in tree.contract_order():
+        l, r = tree.children[v]
+        if l in dependent or r in dependent:
+            dependent.add(v)
+    return dependent
+
+
 def correlated_contractions(tree: ContractionTree, bit: int) -> list[int]:
     m = 1 << bit
     return [v for v in tree.children if tree.node_mask(v) & m]

@@ -15,7 +15,12 @@ port of that bridge between the planner and the kernels:
   cache     — compiled-plan LRU keyed by a canonical network
               fingerprint (structure + dtype + open indices + planner
               params), so repeated requests for the same circuit family
-              skip planning and retracing
+              skip planning and retracing; plus the hoisted-prologue LRU
+              keyed by leaf-array fingerprint
+  partition — lifetime-based two-phase split (Sec. III interpretation):
+              slice-invariant prologue vs slice-dependent epilogue, the
+              hoisted buffer frontier between them, and the executed-FLOPs
+              accounting that turns Eq. 4 into a runtime win
 
 Sunway→TPU mapping of the refiner, for the record: SWTT 8×8 fused-GEMM
 kernel quantization → MXU 128×128 tile quantization; LDM residency →
@@ -24,8 +29,16 @@ fp16-compute/fp32-accumulate → bf16/fp32 ``preferred_element_type``;
 the permute-or-pad index rewrite → per-node pad-vs-split block choice.
 """
 
-from .cache import PLAN_CACHE, PlanCache, PlanEntry, network_fingerprint  # noqa: F401
+from .cache import (  # noqa: F401
+    PLAN_CACHE,
+    HoistCache,
+    PlanCache,
+    PlanEntry,
+    leaf_fingerprint,
+    network_fingerprint,
+)
 from .gemm_form import GemmForm, apply, lower_step  # noqa: F401
+from .partition import TreePartition, partition_tree  # noqa: F401
 from .refiner import (  # noqa: F401
     GemmSpec,
     LoweredSchedule,

@@ -33,7 +33,7 @@ import hashlib
 import os
 import threading
 from collections import OrderedDict
-from typing import Any, Hashable
+from typing import Any, Hashable, Sequence
 
 
 def network_fingerprint(tn, dtype=None, extra: tuple = ()) -> str:
@@ -55,6 +55,27 @@ def network_fingerprint(tn, dtype=None, extra: tuple = ()) -> str:
     sizes = tuple(tn.size_of(ix) for ix in rename)
     payload = repr((structure, open_ids, sizes, str(dtype), extra))
     return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def leaf_fingerprint(arrays: Sequence, indices: Sequence[int] | None = None) -> str:
+    """SHA-256 over the *values* of selected leaf arrays.
+
+    Two-phase execution materializes the slice-invariant prologue once
+    and reuses it for every slice; this fingerprint is what makes that
+    reuse safe across *calls*: the hoisted tensors are a pure function of
+    the prologue's leaf arrays, so they can be served from an LRU keyed
+    by this digest (e.g. repeated sampler calls on the same open-qubit
+    batch network reuse the hoisted stem).  ``indices`` restricts the
+    digest to the leaves the prologue actually consumes, so epilogue-only
+    value changes (different sliced-leaf projections) still hit."""
+    import numpy as np
+
+    h = hashlib.sha256()
+    for i in range(len(arrays)) if indices is None else indices:
+        a = np.asarray(arrays[i])
+        h.update(repr((int(i), a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
 
 
 @dataclasses.dataclass
@@ -109,6 +130,16 @@ class PlanCache:
                 "hits": self.hits,
                 "misses": self.misses,
             }
+
+
+class HoistCache(PlanCache):
+    """LRU of materialized slice-invariant prologue tensors, keyed by
+    :func:`leaf_fingerprint` of the prologue's leaf arrays.
+
+    One instance lives on each :class:`~repro.core.executor.
+    ContractionPlan` (the hoisted buffers are only meaningful for that
+    plan's partition); the stored value is the list of hoisted device
+    arrays in ``partition.hoisted_nodes`` order."""
 
 
 #: process-global cache used by :mod:`repro.core.api`

@@ -1,0 +1,288 @@
+"""Two-phase (lifetime-partitioned) execution: partitioner correctness
+against brute-force lifetime closures, hoisted == naive equivalence on
+both backends (with/without open indices, under vmap slice batching and
+the shard_map subprocess harness), ragged slice batches, the prologue
+cache, and the REPRO_HOIST off-switch."""
+
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import random_closed_network, random_tree, subprocess_kwargs
+from repro.core import (
+    ContractionPlan,
+    default_hoist,
+    simplify_network,
+    simulate_amplitude,
+)
+from repro.core.executor import auto_slice_batch
+from repro.core.lifetime import lifetime_closure, lifetime_edges
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.core.tensor_network import bits
+from repro.lowering.partition import partition_tree
+from repro.quantum import statevector
+from repro.quantum.circuits import circuit_to_network, random_1d_circuit
+
+
+def _random_smask(tree, rng, max_bits=4):
+    """A slicing mask over closed (degree-2, non-open) indices."""
+    closed = [
+        b
+        for b in range(tree.tn.num_inds)
+        if not (tree.tn.open_mask >> b) & 1
+    ]
+    k = int(rng.integers(1, max_bits + 1))
+    chosen = rng.choice(closed, size=min(k, len(closed)), replace=False)
+    m = 0
+    for b in chosen:
+        m |= 1 << int(b)
+    return m
+
+
+# ---------------------------------------------------------- partitioner
+@given(n=st.integers(6, 20), seed=st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_closure_matches_bruteforce_lifetimes(n, seed):
+    """The slice-dependent set is exactly the union, over sliced bits, of
+    the lifetime edges (Thm. 1 leaf-to-leaf paths) plus all their
+    ancestors — computed here the slow way, node by node."""
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed=seed)
+    rng = np.random.default_rng(seed)
+    smask = _random_smask(tree, rng)
+    expected = set()
+    for b in bits(smask):
+        for v in lifetime_edges(tree, b):
+            expected.add(v)
+            while v in tree.parent:  # upward closure
+                v = tree.parent[v]
+                expected.add(v)
+    assert lifetime_closure(tree, smask) == expected
+
+
+@given(n=st.integers(6, 20), seed=st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_partition_invariants(n, seed):
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed=seed)
+    rng = np.random.default_rng(seed)
+    smask = _random_smask(tree, rng)
+    part = partition_tree(tree, smask)
+    internal = set(tree.children)
+    # invariant + epilogue is a disjoint cover of the internal nodes
+    assert set(part.invariant_nodes) | set(part.epilogue_nodes) == internal
+    assert not set(part.invariant_nodes) & set(part.epilogue_nodes)
+    # invariant nodes never touch a sliced index
+    for v in part.invariant_nodes:
+        assert tree.node_mask(v) & smask == 0
+    # hoisted frontier: invariant nodes consumed by the slice loop
+    for v in part.hoisted_nodes:
+        assert v in set(part.invariant_nodes)
+        p = tree.parent.get(v)
+        assert p is None or p in part.dependent
+    # the root depends on every sliced index
+    assert tree.root in part.dependent
+    # leaf cover
+    leaves = set(part.prologue_leaves) | set(part.epilogue_leaves)
+    assert leaves == set(range(tn.num_tensors))
+    # cost accounting: hoisted <= naive (Eq. 6), both tied to Eq. 3/4
+    assert part.total_cost == pytest.approx(tree.total_cost())
+    assert part.naive_cost() == pytest.approx(tree.sliced_cost(smask))
+    assert part.hoisted_cost() <= part.naive_cost() + 1e-6
+    assert part.hoisted_overhead() <= tree.slicing_overhead(smask) + 1e-9
+    if part.invariant_nodes:
+        assert part.hoisted_overhead() < tree.slicing_overhead(smask)
+        assert 0.0 < part.invariant_fraction < 1.0
+
+
+# ------------------------------------------------- hoisted == naive
+def _closed_case(seed, nq=10, cycles=8):
+    c = random_1d_circuit(nq, cycles, seed=seed)
+    rng = np.random.default_rng(seed)
+    bs = "".join(str(b) for b in rng.integers(0, 2, nq))
+    tn, arrays = circuit_to_network(c, bitstring=bs)
+    return simplify_network(tn, arrays)
+
+
+@pytest.mark.parametrize("backend", ["einsum", "gemm"])
+def test_hoisted_equals_naive_closed(backend):
+    tn, arrays = _closed_case(3)
+    tree = random_greedy_tree(tn, repeats=4)
+    S = find_slices(tree, 4, method="lifetime")
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    plan = ContractionPlan(tree, S, backend=backend)
+    assert plan.can_hoist  # the case must actually exercise hoisting
+    naive = np.asarray(plan.contract_all(arrays, slice_batch=4, hoist=False))
+    hoisted = np.asarray(plan.contract_all(arrays, slice_batch=4, hoist=True))
+    np.testing.assert_allclose(naive, dense, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hoisted, dense, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["einsum", "gemm"])
+def test_hoisted_equals_naive_open_indices(backend):
+    """Open output wires (batched sampling network) under slicing: the
+    hoisted amplitude batch must match the naive one entry-for-entry."""
+    from repro.sampling.batch import open_batch_network
+
+    c = random_1d_circuit(10, 8, seed=3)
+    tn, arrays = open_batch_network(c, "0" * 10, (7, 8, 9))
+    tree = random_greedy_tree(tn, repeats=4)
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    S = find_slices(tree, 5, method="lifetime")
+    plan = ContractionPlan(tree, S, backend=backend)
+    assert plan.num_sliced > 0 and plan.can_hoist
+    naive = np.asarray(plan.contract_all(arrays, slice_batch=2, hoist=False))
+    hoisted = np.asarray(plan.contract_all(arrays, slice_batch=2, hoist=True))
+    assert dense.shape == (2, 2, 2)
+    np.testing.assert_allclose(naive, dense, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(hoisted, dense, rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 500), nq=st.integers(6, 10))
+@settings(max_examples=6)
+def test_hoisted_amplitude_property(seed, nq):
+    """End-to-end: simulate_amplitude(hoist=True) == hoist=False ==
+    statevector oracle, through the full planner under vmapped slice
+    batching."""
+    c = random_1d_circuit(nq, 5, seed=seed)
+    rng = np.random.default_rng(seed)
+    bs = "".join(str(b) for b in rng.integers(0, 2, nq))
+    ref = statevector.amplitude(c, bs)
+    r_h = simulate_amplitude(c, bs, target_dim=5, seed=seed, hoist=True,
+                             use_cache=False)
+    r_n = simulate_amplitude(c, bs, target_dim=5, seed=seed, hoist=False,
+                             use_cache=False)
+    assert abs(complex(r_h.value) - ref) < 1e-4
+    assert abs(complex(r_h.value) - complex(r_n.value)) < 1e-5
+    assert r_h.report.measured_overhead <= r_n.report.measured_overhead + 1e-9
+    assert r_h.report.measured_overhead <= r_h.report.slicing_overhead + 1e-9
+
+
+SHARDED_HOIST = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.quantum.circuits import random_1d_circuit, circuit_to_network
+from repro.core import simplify_network, ContractionPlan
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.core.distributed import contract_sharded
+from repro.launch.mesh import make_host_mesh
+
+c = random_1d_circuit(10, 8, seed=3)
+tn, arrays = circuit_to_network(c, bitstring="0110100101")
+tn, arrays = simplify_network(tn, arrays)
+tree = random_greedy_tree(tn, repeats=4)
+S = find_slices(tree, 4, method="lifetime")
+dense = ContractionPlan(tree, 0).contract_all(arrays)
+for backend in ("einsum", "gemm"):
+    plan = ContractionPlan(tree, S, backend=backend)
+    assert plan.can_hoist
+    for hoist in (False, True):
+        mesh = make_host_mesh((4,), ("data",))
+        v = contract_sharded(plan, arrays, mesh, axis_names=("data",),
+                             slice_batch=2, hoist=hoist)
+        assert np.allclose(np.asarray(v), np.asarray(dense), atol=1e-5), (
+            backend, hoist)
+    # prologue ran once per process and is served from the hoist cache
+    assert plan._hoist_cache.stats()["misses"] == 1
+    v2 = contract_sharded(plan, arrays, mesh, axis_names=("data",),
+                          slice_batch=2, hoist=True)
+    assert np.allclose(np.asarray(v2), np.asarray(dense), atol=1e-5)
+    assert plan._hoist_cache.stats()["hits"] >= 1
+print("DONE")
+"""
+
+
+def test_contract_sharded_hoisted():
+    """Hoisted == naive under the shard_map subprocess harness, both
+    backends; the prologue is computed outside the slice loop."""
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_HOIST],
+        capture_output=True, text=True, timeout=900,
+        **subprocess_kwargs(),
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
+
+
+# ------------------------------------------------- ragged slice batches
+def test_ragged_slice_batch_any_size():
+    """Any slice_batch works: the final ragged batch is padded with
+    wrapped-around slice ids masked out, so results never change."""
+    tn, arrays = _closed_case(7)
+    tree = random_greedy_tree(tn, repeats=4)
+    S = find_slices(tree, 4, method="lifetime")
+    plan = ContractionPlan(tree, S)
+    n_slices = 1 << plan.num_sliced
+    assert n_slices >= 8
+    dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+    for sb in (3, 5, 7, n_slices - 1, n_slices + 9):
+        for hoist in (False, True):
+            v = np.asarray(
+                plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
+            )
+            np.testing.assert_allclose(
+                v, dense, rtol=1e-4, atol=1e-5,
+                err_msg=f"slice_batch={sb} hoist={hoist}",
+            )
+
+
+def test_auto_slice_batch_no_longer_shrinks():
+    """auto_slice_batch honors the request (clamped to n_slices) instead
+    of silently shrinking to a divisor."""
+    assert auto_slice_batch(3, 8) == 3
+    assert auto_slice_batch(5, 8) == 5
+    assert auto_slice_batch(6, 4) == 4
+    assert auto_slice_batch(8, 8) == 8
+    assert auto_slice_batch(0, 8) == 1
+    assert auto_slice_batch(7, 1) == 1
+
+
+# ----------------------------------------------- prologue cache + env
+def test_prologue_cache_reuse_and_invalidation():
+    tn, arrays = _closed_case(5)
+    tree = random_greedy_tree(tn, repeats=4)
+    S = find_slices(tree, 4, method="lifetime")
+    plan = ContractionPlan(tree, S)
+    assert plan.can_hoist
+    v1 = np.asarray(plan.contract_all(arrays, slice_batch=4, hoist=True))
+    assert plan._hoist_cache.stats() == dict(
+        size=1, maxsize=plan._hoist_cache.maxsize, hits=0, misses=1
+    )
+    v2 = np.asarray(plan.contract_all(arrays, slice_batch=4, hoist=True))
+    assert plan._hoist_cache.stats()["hits"] == 1
+    np.testing.assert_allclose(v1, v2, atol=1e-7)
+    # changing a prologue leaf's values must miss (different fingerprint)
+    arrays2 = [np.asarray(a) for a in arrays]
+    i = plan.prologue_leaves[0]
+    arrays2[i] = arrays2[i] * 0.5
+    _ = plan.contract_all(arrays2, slice_batch=4, hoist=True)
+    assert plan._hoist_cache.stats()["misses"] == 2
+
+
+def test_default_hoist_env(monkeypatch):
+    monkeypatch.delenv("REPRO_HOIST", raising=False)
+    assert default_hoist() is True
+    monkeypatch.setenv("REPRO_HOIST", "0")
+    assert default_hoist() is False
+    monkeypatch.setenv("REPRO_HOIST", "1")
+    assert default_hoist() is True
+    monkeypatch.setenv("REPRO_HOIST", "yes")
+    with pytest.raises(ValueError):
+        default_hoist()
+
+
+def test_report_hoist_fields():
+    c = random_1d_circuit(9, 7, seed=11)
+    res = simulate_amplitude(c, "011010010", target_dim=4, use_cache=False,
+                             hoist=True)
+    rep = res.report
+    assert 0.0 <= rep.invariant_fraction < 1.0
+    assert rep.measured_overhead <= rep.slicing_overhead + 1e-9
+    assert rep.modeled_time_hoisted_s <= rep.modeled_time_s + 1e-12
+    assert "hoist=on" in rep.row()
+    assert res.plan.hoist_summary().startswith("hoist:")
