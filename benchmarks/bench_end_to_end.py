@@ -41,11 +41,20 @@ def run(circuit: str = "syc-12") -> list[str]:
             repeat=2,
         )
         results[label] = complex(val)
+        # memory columns: planned live-set peak (lifetime buffer plan) and
+        # the fused-kernel transpose-bytes credit of the lowered schedule
+        mem = plan.memory_plan()
+        from repro.lowering.refiner import refine_tree_schedule
+
+        sched = refine_tree_schedule(tree, smask)
         rows.append(
             f"e2e_{label}_ms,{t*1e3:.1f},"
             f"overhead={report.slicing_overhead:.3f};"
             f"slices={report.num_sliced};"
-            f"tpu_model_s={modeled_tree_time(tree, smask):.3e}"
+            f"tpu_model_s={modeled_tree_time(tree, smask):.3e};"
+            f"peak_bytes={mem.peak_bytes};"
+            f"peak_bytes_hoisted={mem.peak_bytes_hoisted};"
+            f"tb_elim={sched.transpose_bytes_eliminated():.3e}"
         )
     assert abs(results["greedy_base"] - results["paper_faithful"]) < 1e-4, (
         "pipelines disagree on the amplitude!"

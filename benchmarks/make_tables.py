@@ -3,9 +3,11 @@ experiments/dryrun/*.json, plus the §Sampling throughput table when
 ``benchmarks.bench_sampling_throughput --json`` output is present under
 experiments/sampling/, the §Lowering backend table from the trajectory
 records ``benchmarks.bench_flops_efficiency`` appends under
-experiments/lowering/, and the §Hoisting table (naive vs two-phase
+experiments/lowering/, the §Hoisting table (naive vs two-phase
 sliced execution) from the records ``benchmarks.bench_slicing_overhead``
-appends under experiments/hoisting/.
+appends under experiments/hoisting/, and the §Memory table (peak-aware
+slicer vs width proxy + fused transpose credit) from the records the
+same benchmark's ``memory_rows`` appends under experiments/memory/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -168,6 +170,45 @@ def print_hoisting_table(hoisting_dir="experiments/hoisting") -> None:
         )
 
 
+def print_memory_table(memory_dir="experiments/memory") -> None:
+    """§Memory rows: width-proxy vs peak-aware slicing (lifetime-based
+    buffer plans) + fused-kernel transpose credit, one row per
+    trajectory record."""
+    paths = sorted(glob.glob(os.path.join(memory_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows.extend(rec.get("records", []))
+    if not rows:
+        return
+    print("\n### Lifetime-based memory planning "
+          "(peak-aware slicer vs width proxy, fused transpose credit)\n")
+    print("| workload | \\|S\\| width → peak | planned peak width → peak | "
+          "byte budget | transpose bytes eliminated | "
+          "wall width → peak | speedup |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "num_sliced_width" not in r:
+            continue
+        wall = speed = "-"
+        if r.get("wall_width_s") is not None:
+            wall = (
+                f"{fmt_s(r['wall_width_s'])} → {fmt_s(r['wall_peak_s'])}"
+            )
+            speed = f"{r['speedup_peak_over_width']:.2f}×"
+        print(
+            f"| {r.get('workload', '-')} "
+            f"| {r['num_sliced_width']} → {r['num_sliced_peak']} "
+            f"| {fmt_bytes(r['peak_bytes_width'])} → "
+            f"{fmt_bytes(r['peak_bytes_peak'])} "
+            f"| {fmt_bytes(r.get('budget_bytes'))} "
+            f"| {fmt_bytes(r.get('transpose_bytes_eliminated'))} "
+            f"| {wall} | {speed} |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -220,6 +261,7 @@ def main() -> None:
     print_sampling_table()
     print_lowering_table()
     print_hoisting_table()
+    print_memory_table()
 
 
 if __name__ == "__main__":

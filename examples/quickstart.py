@@ -89,6 +89,21 @@ def main() -> None:
         f"(REPRO_HOIST=0 disables)"
     )
 
+    # lifetime-based memory plan: exact live-set peaks + buffer slots,
+    # and the peak-aware slicer (slicing_mode="peak") which stops slicing
+    # once the planned peak — not the width proxy — fits the budget
+    mem = plan.memory_plan()
+    res_peak = simulate_amplitude(
+        circuit, "1001011010", target_dim=5, backend=args.backend,
+        slicing_mode="peak", use_cache=False,
+    )
+    assert abs(complex(res_peak.value) - complex(result2.value)) < 1e-5
+    print(
+        f"memory plan    : peak={mem.peak_bytes}B "
+        f"hoisted={mem.peak_bytes_hoisted}B slots={mem.buffer_slots} "
+        f"peak-aware |S| {rep.num_sliced}->{res_peak.report.num_sliced}"
+    )
+
     # batch sampling: hold 3 output qubits open → one contraction yields
     # all 8 correlated amplitudes; draw bitstrings by frequency sampling
     samples = sample_bitstrings(

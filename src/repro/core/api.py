@@ -36,6 +36,14 @@ from .tensor_network import popcount
 from .tuning import tuning_slice_finder
 
 
+def _fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB"):
+        if b < 1024:
+            return f"{b:.0f}{unit}"
+        b /= 1024
+    return f"{b:.1f}TB"
+
+
 @dataclasses.dataclass
 class PlanReport:
     """Planner metrics mirroring the paper's reported quantities."""
@@ -61,6 +69,11 @@ class PlanReport:
     invariant_fraction: float = 0.0  # share of C(B) hoisted out of slices
     measured_overhead: float = 1.0  # executed-FLOPs overhead of the mode
     modeled_time_hoisted_s: float = 0.0  # Sec. V model under hoisting
+    # lifetime-based memory plan + fused-kernel metrics (PR 4)
+    peak_bytes: int = 0  # exact live-set peak, naive subtask
+    peak_bytes_hoisted: int = 0  # live-set peak under two-phase execution
+    buffer_slots: int = 0  # linear-scan slot count (naive subtask)
+    transpose_bytes_saved: float = 0.0  # HBM bytes fused kernels avoid/slice
 
     def row(self) -> str:
         row = (
@@ -76,6 +89,11 @@ class PlanReport:
                 f"[inv={self.invariant_fraction:.2f}"
                 f" ov={self.measured_overhead:.3f}]"
             )
+        if self.peak_bytes:
+            row += f" peak={_fmt_bytes(self.peak_bytes)}"
+            if self.peak_bytes_hoisted != self.peak_bytes:
+                row += f"->{_fmt_bytes(self.peak_bytes_hoisted)}"
+            row += f" slots={self.buffer_slots}"
         if self.cache_hit:
             row += " cache=hit"
         if self.lowered_backends:
@@ -83,6 +101,8 @@ class PlanReport:
                 f"{k}={v}" for k, v in sorted(self.lowered_backends.items())
             )
             row += f" lowered[{nodes}] pad_waste={self.pad_waste*100:.1f}%"
+            if self.transpose_bytes_saved:
+                row += f" tb_saved={_fmt_bytes(self.transpose_bytes_saved)}"
         return row
 
 
@@ -103,8 +123,18 @@ def plan_contraction(
     merge: bool = True,
     repeats: int = 8,
     seed: int = 0,
+    slicing_mode: str = "width",
+    itemsize: int = 8,
 ):
-    """Full planning pipeline on a tensor network."""
+    """Full planning pipeline on a tensor network.
+
+    ``slicing_mode="peak"`` re-judges the final slicing mask against the
+    lifetime-based memory plan's live-set peak instead of the width
+    proxy (see :func:`repro.core.slicing.refine_slices_for_peak`):
+    indices the true peak never needed are dropped, shrinking the
+    ``2^|S|`` subtask count at the same byte budget."""
+    from .slicing import refine_slices_for_peak
+
     t0 = time.perf_counter()
     tree = random_greedy_tree(tn, repeats=repeats, seed=seed)
     width0 = tree.width()
@@ -117,11 +147,18 @@ def plan_contraction(
         tree = merge_branches(tree, smask).tree
         smask = find_slices(tree, target_dim, method=method, seed=seed)
     tree = orient_gemms(tree)
+    if slicing_mode == "peak" and smask:
+        smask = refine_slices_for_peak(
+            tree, smask, target_dim, itemsize=itemsize
+        )
+    elif slicing_mode != "width":
+        raise ValueError(f"unknown slicing_mode {slicing_mode!r}")
     wall = time.perf_counter() - t0
     naive_overhead = tree.slicing_overhead(smask)
     hoist_on = default_hoist()
     invariant_fraction = 0.0
     hoisted_overhead = naive_overhead
+    part = None
     if smask:
         from ..lowering.partition import partition_tree  # lazy: cycle
 
@@ -129,6 +166,9 @@ def plan_contraction(
         invariant_fraction = part.invariant_fraction
         hoisted_overhead = part.hoisted_overhead()
     modeled = modeled_tree_time(tree, smask)
+    from ..lowering.memory import plan_memory  # lazy: avoid cycle
+
+    mem = plan_memory(tree, smask, itemsize=itemsize, part=part)
     report = PlanReport(
         num_tensors=tn.num_tensors,
         width_before=width0,
@@ -143,6 +183,9 @@ def plan_contraction(
         invariant_fraction=invariant_fraction,
         measured_overhead=hoisted_overhead if hoist_on else naive_overhead,
         modeled_time_hoisted_s=modeled * hoisted_overhead / naive_overhead,
+        peak_bytes=mem.peak_bytes,
+        peak_bytes_hoisted=mem.peak_bytes_hoisted,
+        buffer_slots=mem.buffer_slots,
     )
     return tree, smask, report
 
@@ -158,6 +201,7 @@ def plan_compiled(
     repeats: int = 8,
     seed: int = 0,
     use_cache: bool = True,
+    slicing_mode: str = "width",
 ) -> tuple[ContractionPlan, PlanReport]:
     """Plan + lower a network into an executable :class:`ContractionPlan`,
     consulting the compiled-plan cache.
@@ -171,6 +215,7 @@ def plan_compiled(
     deterministic function of the key).
     """
     from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
+    from ..lowering.refiner import default_fused
 
     import jax.numpy as jnp
 
@@ -179,10 +224,13 @@ def plan_compiled(
     t0 = time.perf_counter()
     key = None
     if use_cache:
+        # REPRO_FUSED_GEMM changes the refined schedule, so it is part of
+        # the key (like the backend itself)
         key = network_fingerprint(
             tn,
             dtype,
-            extra=(backend, target_dim, method, tune, merge, repeats, seed),
+            extra=(backend, target_dim, method, tune, merge, repeats, seed,
+                   slicing_mode, default_fused()),
         )
         ent = PLAN_CACHE.get(key)
         if ent is not None:
@@ -203,12 +251,15 @@ def plan_compiled(
             return ent.plan, report
     tree, smask, report = plan_contraction(
         tn, target_dim, method=method, tune=tune, merge=merge,
-        repeats=repeats, seed=seed,
+        repeats=repeats, seed=seed, slicing_mode=slicing_mode,
+        itemsize=dtype.itemsize,
     )
     plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
     report.backend = plan.backend
     # re-derive the two-phase metrics from the plan's own partition so the
-    # report always describes the object that will execute
+    # report always describes the object that will execute (the memory
+    # fields were already computed by plan_contraction with this dtype's
+    # itemsize — no recompute needed)
     report.invariant_fraction = plan.invariant_fraction
     report.measured_overhead = plan.executed_overhead(report.hoist)
     if plan.schedule is not None:
@@ -226,6 +277,9 @@ def plan_compiled(
         ) * (1 << plan.num_sliced)
         report.lowered_backends = plan.schedule.backend_counts()
         report.pad_waste = plan.schedule.pad_waste()
+        report.transpose_bytes_saved = (
+            plan.schedule.transpose_bytes_eliminated()
+        )
     report.plan_wall_s = time.perf_counter() - t0
     if use_cache:
         PLAN_CACHE.put(key, PlanEntry(plan, report))
@@ -250,6 +304,7 @@ def simulate_amplitude(
     backend: str | None = None,
     use_cache: bool = True,
     hoist: bool | None = None,
+    slicing_mode: str = "width",
 ) -> SimulationResult:
     """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
 
@@ -274,6 +329,7 @@ def simulate_amplitude(
         merge=merge,
         seed=seed,
         use_cache=use_cache,
+        slicing_mode=slicing_mode,
     )
     sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
     value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
@@ -305,6 +361,7 @@ def sample_bitstrings(
     backend: str | None = None,
     use_cache: bool = True,
     hoist: bool | None = None,
+    slicing_mode: str = "width",
 ):
     """Draw correlated bitstring samples from one batched contraction —
     the paper's flagship workload (Sec. VI: 1M correlated Sycamore samples).
@@ -375,6 +432,7 @@ def sample_bitstrings(
         merge=merge,
         seed=seed,
         use_cache=use_cache,
+        slicing_mode=slicing_mode,
     )
     amps = batch_mod.contract_amplitude_batch(
         plan, arrays, slice_batch=slice_batch, mesh=mesh,

@@ -288,6 +288,10 @@ class ContractionPlan:
         self._hoist_cache = HoistCache(
             maxsize=int(os.environ.get("REPRO_HOIST_CACHE_SIZE", "8"))
         )
+        # lifetime-based buffer plan (lazy: the slicer may have built one
+        # already at planning time, but the executor's copy uses the
+        # plan's own dtype itemsize)
+        self._memory_plan = None
 
     # ------------------------------------------------------------------
     @property
@@ -342,6 +346,23 @@ class ContractionPlan:
         )
 
     # ------------------------------------------------------------------
+    # lifetime-based buffer plan
+    # ------------------------------------------------------------------
+    def memory_plan(self):
+        """The lifetime-based :class:`~repro.lowering.memory.MemoryPlan`
+        for this plan's ``(tree, S)`` pair — exact live-set peaks per
+        execution segment, linear-scan buffer slots, and the per-step
+        free schedule :meth:`_run_steps` executes.  Built lazily once per
+        plan (pure planner algebra, no arrays touched)."""
+        if self._memory_plan is None:
+            from ..lowering.memory import plan_memory  # lazy: avoid cycle
+
+            self._memory_plan = plan_memory(
+                self.tree, self.smask, itemsize=self.dtype.itemsize
+            )
+        return self._memory_plan
+
+    # ------------------------------------------------------------------
     def slice_values(self, slice_id):
         """bit-decompose a (traced) slice id into per-index 0/1 values."""
         ar = jnp.arange(self.num_sliced, dtype=jnp.int32)
@@ -349,23 +370,34 @@ class ContractionPlan:
             jnp.right_shift(jnp.asarray(slice_id, jnp.int32), ar) & 1
         ).astype(jnp.int32)
 
-    def _run_steps(self, env: dict, step_ids) -> jnp.ndarray:
+    def _run_steps(self, env: dict, step_ids, segment: str = "naive") -> None:
         """Execute the given step positions over ``env`` (shared by the
-        prologue, the epilogue, and the naive full-tree path)."""
-        if self.schedule is None:
-            for k in step_ids:
-                st = self.steps[k]
-                env[st.out] = jnp.einsum(st.expr, env[st.lhs], env[st.rhs])
-                del env[st.lhs], env[st.rhs]
-        else:
-            from ..lowering import gemm_form  # lazy: avoid cycle
+        prologue, the epilogue, and the naive full-tree path).
 
-            for k in step_ids:
-                st = self.steps[k]
+        Frees are driven by the lifetime-based memory plan's per-step
+        free schedule for ``segment`` — deterministic last-use drops (in
+        the epilogue this keeps the pinned hoisted buffers out of the
+        free lists; they are cross-slice captures whose storage is never
+        reclaimable inside one subtask)."""
+        seg = self.memory_plan().segment_for(segment)
+        frees = seg.frees if seg is not None else None
+        for k in step_ids:
+            st = self.steps[k]
+            if self.schedule is None:
+                env[st.out] = jnp.einsum(st.expr, env[st.lhs], env[st.rhs])
+            else:
+                from ..lowering import gemm_form  # lazy: avoid cycle
+
                 env[st.out] = gemm_form.apply(
                     self.schedule.specs[k], env[st.lhs], env[st.rhs]
                 )
-                del env[st.lhs], env[st.rhs]
+            dead = (
+                frees[st.out]
+                if frees is not None
+                else (st.lhs, st.rhs)
+            )
+            for u in dead:
+                del env[u]
 
     def contract_slice(
         self, arrays: Sequence[jnp.ndarray], slice_id, hoisted=None
@@ -380,10 +412,12 @@ class ContractionPlan:
         if hoisted is None:
             leaf_ids: Sequence[int] = range(len(arrays))
             step_ids: Sequence[int] = range(len(self.steps))
+            segment = "naive"
         else:
             env.update(zip(self.hoisted_nodes, hoisted))
             leaf_ids = self.epilogue_leaves
             step_ids = self.epilogue_idx
+            segment = "epilogue"
         for i in leaf_ids:
             a = jnp.asarray(arrays[i])
             for axis, spos in self.leaf_specs[i]:
@@ -391,7 +425,7 @@ class ContractionPlan:
                     a, svals[spos], axis=axis, keepdims=False
                 )
             env[i] = a
-        self._run_steps(env, step_ids)
+        self._run_steps(env, step_ids, segment)
         out = env[self.root]
         if self.out_perm and self.out_perm != tuple(range(out.ndim)):
             out = jnp.transpose(out, self.out_perm)
@@ -406,7 +440,7 @@ class ContractionPlan:
         env: dict[int, jnp.ndarray] = {
             i: jnp.asarray(arrays[i]) for i in self.prologue_leaves
         }
-        self._run_steps(env, self.prologue_idx)
+        self._run_steps(env, self.prologue_idx, "prologue")
         return [env[v] for v in self.hoisted_nodes]
 
     def contract_prologue(self, arrays, use_cache: bool = True):
@@ -414,31 +448,32 @@ class ContractionPlan:
 
         The result is memoized two ways: the jitted program on the plan
         (no retracing), and the concrete output buffers in an LRU keyed
-        by the fingerprint of the prologue's leaf arrays — so repeated
-        calls with the same invariant leaves (e.g. sampler calls reusing
-        one open-qubit batch network) skip the prologue compute entirely.
-        The fingerprint hashes the leaf values (cheap for RQC gate-sized
-        leaves, but a host transfer for device-resident arrays); set
+        by :func:`repro.lowering.cache.leaf_key` over the prologue's
+        leaf arrays.  Device-resident leaves are keyed by shape/dtype +
+        buffer identity — no device→host transfer on the hot path; the
+        key's keep-alive references ride with the cache entry so an id
+        can never be recycled while its entry is live.  Host (numpy)
+        leaves fall back to value hashing.  Set
         ``REPRO_HOIST_CACHE_SIZE=0`` or ``use_cache=False`` to skip both
-        the hash and the cache.
+        the key and the cache.
         """
         if not self.can_hoist:
             return []
         key = None
         if use_cache and self._hoist_cache.maxsize > 0:
-            from ..lowering.cache import leaf_fingerprint  # lazy: cycle
+            from ..lowering.cache import leaf_key  # lazy: cycle
 
-            key = leaf_fingerprint(arrays, self.prologue_leaves)
+            key, keepalive = leaf_key(arrays, self.prologue_leaves)
             hit = self._hoist_cache.get(key)
             if hit is not None:
-                return hit
+                return hit[0]
         ck = ("prologue",)
         fn = self._compiled.get(ck) or self._compiled.setdefault(
             ck, jax.jit(lambda a: self._prologue_outputs(a))
         )
         out = fn(list(arrays))
         if key is not None:
-            self._hoist_cache.put(key, out)
+            self._hoist_cache.put(key, (out, keepalive))
         return out
 
     # ------------------------------------------------------------------
@@ -455,7 +490,14 @@ class ContractionPlan:
 
         ``hoist`` selects two-phase execution (default: ``REPRO_HOIST``):
         the slice-invariant prologue is materialized once via
-        :meth:`contract_prologue` and the scan runs only the epilogue."""
+        :meth:`contract_prologue` and the scan runs only the epilogue.
+        Within the jitted scan, buffer reclamation is driven by the
+        memory plan's deterministic free schedule (:meth:`_run_steps`
+        drops each tracer at its planned last use, which is what lets
+        XLA's allocator reuse the slot); jit-argument donation of the
+        hoisted buffers would be a no-op here — donated inputs are only
+        reclaimed via input→output aliasing and the scan's sole output
+        is the small amplitude accumulator."""
         n_slices = 1 << self.num_sliced
         if self.num_sliced == 0:
             key = ("dense",)

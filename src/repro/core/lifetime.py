@@ -63,6 +63,41 @@ def correlated_contractions(tree: ContractionTree, bit: int) -> list[int]:
     return [v for v in tree.children if tree.node_mask(v) & m]
 
 
+def step_lifetimes(
+    steps: list[tuple[int, int, int]],
+    entry: tuple[int, ...],
+    outputs: tuple[int, ...] = (),
+) -> tuple[dict[int, int], dict[int, int]]:
+    """(birth, death) step indices for every buffer of an execution
+    segment — the *buffer* counterpart of the paper's index lifetimes
+    (Thm. 1 is about when an index exists; this is about when a tensor
+    occupies memory).
+
+    ``steps`` are ``(lhs, rhs, out)`` node ids in execution order;
+    ``entry`` buffers (leaf arrays, hoisted frontier tensors) are born at
+    step ``-1``.  A buffer dies at the step that consumes it — in a
+    contraction *tree* every node has exactly one consumer — except the
+    segment ``outputs`` (and any never-consumed entry), which live to the
+    segment end.  A buffer is live at step ``t`` iff
+    ``birth[v] <= t <= death[v]``: during step ``t`` both inputs and the
+    output are resident simultaneously (an out-of-place GEMM cannot
+    alias its operands), which is what makes these closed intervals the
+    exact live-set algebra for the planner in
+    :mod:`repro.lowering.memory`.
+    """
+    end = len(steps)
+    birth = {v: -1 for v in entry}
+    death = {v: end for v in entry}
+    for t, (lhs, rhs, out) in enumerate(steps):
+        birth[out] = t
+        death[out] = end
+        death[lhs] = t
+        death[rhs] = t
+    for v in outputs:
+        death[v] = end
+    return birth, death
+
+
 def leaf_path(tree: ContractionTree, a: int, b: int) -> tuple[list[int], list[int]]:
     """The unique tree path between leaves ``a`` and ``b``.
 

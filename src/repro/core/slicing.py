@@ -22,6 +22,15 @@ Three strategies, all returning an index bitmask ``S``:
 All strategies are followed by :func:`ensure_width` which tops up ``S``
 greedily until the *whole tree* satisfies the memory bound (the paper notes
 stems occasionally miss a huge off-stem tensor).
+
+Beyond the width proxy, :func:`refine_slices_for_peak` (the
+``mode="peak"`` leg of :func:`find_slices`) re-judges the finished mask
+against the *planned live-set peak* from :mod:`repro.lowering.memory`:
+the width bound must conservatively assume several width-sized tensors
+are simultaneously live, so once the schedule's true peak is known,
+slicing can stop earlier — indices whose removal keeps the planned peak
+within the byte budget are pruned, shrinking ``2^|S|`` (a direct
+multiplicative saving on ``contract_all``, Eq. 4).
 """
 
 from __future__ import annotations
@@ -236,14 +245,123 @@ def ensure_width(tree: ContractionTree, S: int, target_dim: int) -> int:
     return S
 
 
+# ----------------------------------------------------------------------
+# peak-aware refinement (lifetime-based memory plan, not the width proxy)
+# ----------------------------------------------------------------------
+# live tensors the width proxy must budget for (operands + output of the
+# running GEMM plus headroom for leaves/branches): width target t with
+# itemsize w therefore implies a byte budget of LIVE_FACTOR * w * 2^t
+DEFAULT_LIVE_FACTOR = 4
+
+
+def peak_budget_for_width(
+    target_dim: int, itemsize: int = 8, live_factor: int = DEFAULT_LIVE_FACTOR
+) -> int:
+    """The byte budget a width-``target_dim`` schedule implicitly
+    guarantees under the proxy's live-set assumption."""
+    return live_factor * itemsize * (1 << target_dim)
+
+
+def refine_slices_for_peak(
+    tree: ContractionTree,
+    S: int,
+    target_dim: int,
+    itemsize: int = 8,
+    budget_bytes: int | None = None,
+) -> int:
+    """Shrink (or, for a hard explicit budget, grow) a slicing mask so
+    the *planned live-set peak* — not the width proxy — meets the byte
+    budget.
+
+    The *certified* peak is the worst case over both execution modes:
+    the naive full-tree subtask and the two-phase hoisted pair
+    (``max(prologue, epilogue)`` — the epilogue counting the pinned
+    hoisted frontier), each at ``slice_batch=1``; the executor's vmap
+    scales the non-pinned epilogue share by the slice batch
+    (:meth:`~repro.lowering.memory.MemoryPlan.epilogue_peak`), an
+    execution-time choice the planner cannot see.
+
+    The naive peak is monotone in ``S`` (removing a sliced index only
+    grows tensors on its lifetime), which drives the top-up loop (same
+    Eq. 6 greedy as :func:`ensure_width`; only reachable with a tight
+    explicit budget).  The prune loop needs no monotonicity — every
+    candidate removal is re-certified against the full budget — so it
+    also covers the non-monotone hoisted segments: repeatedly drop the
+    sliced index whose removal keeps the certified peak within budget at
+    the lowest resulting Eq. 6 cost.  Each drop halves the subtask count
+    outright.
+
+    With ``budget_bytes=None`` the budget is
+    ``max(peak_budget_for_width(target_dim, itemsize),
+    certified_peak(S))`` — never demanding more than the width-proxy
+    schedule already uses, which makes peak mode a strict refinement:
+    ``|S_peak| <= |S_width|`` always, with strict improvement whenever
+    the width pipeline sliced an index the true peak never needed.
+    """
+    from ..lowering.memory import plan_memory  # lazy: avoid import cycle
+
+    def certified_peak(mask: int) -> int:
+        mem = plan_memory(tree, mask, itemsize)
+        return max(mem.peak_bytes, mem.peak_bytes_hoisted)
+
+    if budget_bytes is None:
+        budget_bytes = max(
+            peak_budget_for_width(target_dim, itemsize),
+            certified_peak(S),
+        )
+    open_m = tree.tn.open_mask
+    node_masks = [tree.node_mask(v) for v in tree.children]
+    guard = 0
+    # top-up: only an explicit budget tighter than the width result's own
+    # peak can trigger this
+    while certified_peak(S) > budget_bytes:
+        guard += 1
+        if guard > 5_000:  # pragma: no cover - safety valve
+            break
+        worst = max(tree.emask.values(), key=lambda m: popcount(m & ~S))
+        cands = list(bits(worst & ~open_m & ~S))
+        if not cands:
+            break  # only open indices left: budget unreachable
+        best_b, best_pen = None, float("inf")
+        for c in cands:
+            pen = sum(
+                2.0 ** (popcount(nm) - popcount((S | (1 << c)) & nm))
+                for nm in node_masks
+            )
+            if pen < best_pen:
+                best_pen, best_b = pen, c
+        S |= 1 << best_b
+    # prune: drop indices the true peak never needed
+    while True:
+        guard += 1
+        if guard > 5_000:  # pragma: no cover
+            break
+        removable = [
+            b
+            for b in bits(S)
+            if certified_peak(S & ~(1 << b)) <= budget_bytes
+        ]
+        if not removable:
+            return S
+        b = min(removable, key=lambda b_: (tree.sliced_cost(S & ~(1 << b_)), b_))
+        S &= ~(1 << b)
+    return S
+
+
 def find_slices(
     tree: ContractionTree,
     target_dim: int,
     method: str = "lifetime",
+    mode: str = "width",
+    itemsize: int = 8,
+    budget_bytes: int | None = None,
     **kw,
 ) -> int:
     """Unified entry point.  ``method``: lifetime (paper Alg. 1), greedy
-    (Cotengra baseline), interval (beyond-paper optimal sweep)."""
+    (Cotengra baseline), interval (beyond-paper optimal sweep).
+    ``mode="peak"`` re-judges the finished mask against the planned
+    live-set peak (:func:`refine_slices_for_peak`) instead of stopping at
+    the width proxy."""
     if method == "lifetime":
         S = slice_finder(tree, target_dim, stem=kw.get("stem"))
     elif method == "greedy":
@@ -258,4 +376,11 @@ def find_slices(
         S = interval_optimal_slicer(tree, target_dim, stem=kw.get("stem"))
     else:
         raise ValueError(f"unknown slicing method {method!r}")
-    return ensure_width(tree, S, target_dim)
+    S = ensure_width(tree, S, target_dim)
+    if mode == "peak":
+        S = refine_slices_for_peak(
+            tree, S, target_dim, itemsize=itemsize, budget_bytes=budget_bytes
+        )
+    elif mode != "width":
+        raise ValueError(f"unknown slicing mode {mode!r}")
+    return S

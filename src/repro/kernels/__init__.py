@@ -12,7 +12,11 @@ into submodules.
 """
 
 from . import ops, ref  # noqa: F401
-from .contract_gemm import tiled_matmul  # noqa: F401
+from .contract_gemm import (  # noqa: F401
+    fused_transpose_matmul,
+    suffix_tile_split,
+    tiled_matmul,
+)
 from .flash_attention import flash_attention  # noqa: F401
 from .mamba2_ssd import ssd_intra_chunk  # noqa: F401
-from .ops import attention, matmul, ssd_scan  # noqa: F401
+from .ops import attention, fused_matmul, matmul, ssd_scan  # noqa: F401

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .contract_gemm import tiled_matmul
+from .contract_gemm import fused_transpose_matmul, tiled_matmul
 from .flash_attention import flash_attention
 from .mamba2_ssd import ssd_intra_chunk
 
@@ -81,6 +81,63 @@ def _complex_matmul(
     p2 = matmul(ai, bi, **kw)
     p3 = matmul(ar + ai, br + bi, **kw)
     return (p1 - p2) + 1j * (p3 - p1 - p2)
+
+
+def fused_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    perm_a: tuple[int, ...],
+    perm_b: tuple[int, ...],
+    nb: int,
+    nm: int,
+    nn: int,
+    nk: int,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused transpose-GEMM over tree-native operand layouts, with complex
+    support (the same 3-real-GEMM Karatsuba as :func:`matmul` — real/imag
+    component extraction commutes with the in-kernel permutation, so the
+    components also stay in native layout; no transposed copy ever lands
+    in HBM).  Returns the natural (batch..., m..., n...) output, one axis
+    per role index.
+
+    Rank-0 operands / scalar outputs fall back to the materialized
+    permute + ``jnp.matmul`` reference — Pallas wants at least one output
+    axis, and the refiner never routes such nodes here anyway.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if jnp.iscomplexobj(a) or jnp.iscomplexobj(b):
+        ar = jnp.real(a).astype(jnp.float32)
+        ai = jnp.imag(a).astype(jnp.float32)
+        br = jnp.real(b).astype(jnp.float32)
+        bi = jnp.imag(b).astype(jnp.float32)
+        kw = dict(perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
+                  bm=bm, bn=bn, bk=bk, interpret=interpret)
+        p1 = fused_matmul(ar, br, **kw)
+        p2 = fused_matmul(ai, bi, **kw)
+        p3 = fused_matmul(ar + ai, br + bi, **kw)
+        return (p1 - p2) + 1j * (p3 - p1 - p2)
+    if a.ndim == 0 or b.ndim == 0 or nb + nm + nn == 0:
+        import math
+
+        batch_shape = tuple(a.shape[p] for p in perm_a[:nb])
+        m_shape = tuple(a.shape[p] for p in perm_a[nb:nb + nm])
+        k_shape = tuple(a.shape[p] for p in perm_a[nb + nm:])
+        n_shape = tuple(b.shape[p] for p in perm_b[nb + nk:])
+        B, M = math.prod(batch_shape), math.prod(m_shape)
+        K, N = math.prod(k_shape), math.prod(n_shape)
+        a2 = jnp.transpose(a, perm_a).reshape(B, M, K)
+        b2 = jnp.transpose(b, perm_b).reshape(B, K, N)
+        return jnp.matmul(a2, b2).reshape(batch_shape + m_shape + n_shape)
+    return fused_transpose_matmul(
+        a, b, perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
+        bm=bm, bn=bn, bk=bk, interpret=interpret,
+    )
 
 
 def attention(

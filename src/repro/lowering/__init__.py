@@ -21,6 +21,11 @@ port of that bridge between the planner and the kernels:
               slice-invariant prologue vs slice-dependent epilogue, the
               hoisted buffer frontier between them, and the executed-FLOPs
               accounting that turns Eq. 4 into a runtime win
+  memory    — lifetime-based buffer planner: linear-scan slot assignment
+              over step lifetimes, exact live-set peaks per execution
+              segment (naive / prologue / epilogue), deterministic free
+              schedules and donation hints; feeds PlanReport and the
+              peak-aware slicer mode
 
 Sunway→TPU mapping of the refiner, for the record: SWTT 8×8 fused-GEMM
 kernel quantization → MXU 128×128 tile quantization; LDM residency →
@@ -35,14 +40,25 @@ from .cache import (  # noqa: F401
     PlanCache,
     PlanEntry,
     leaf_fingerprint,
+    leaf_key,
     network_fingerprint,
 )
 from .gemm_form import GemmForm, apply, lower_step  # noqa: F401
+from .memory import (  # noqa: F401
+    MemoryPlan,
+    SegmentPlan,
+    node_nbytes,
+    peak_bytes,
+    plan_memory,
+)
 from .partition import TreePartition, partition_tree  # noqa: F401
 from .refiner import (  # noqa: F401
     GemmSpec,
     LoweredSchedule,
+    default_fused,
     modeled_step_time,
+    operand_transpose_bytes,
     refine_schedule,
     refine_step,
+    refine_tree_schedule,
 )

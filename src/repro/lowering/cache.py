@@ -67,7 +67,11 @@ def leaf_fingerprint(arrays: Sequence, indices: Sequence[int] | None = None) -> 
     by this digest (e.g. repeated sampler calls on the same open-qubit
     batch network reuse the hoisted stem).  ``indices`` restricts the
     digest to the leaves the prologue actually consumes, so epilogue-only
-    value changes (different sliced-leaf projections) still hit."""
+    value changes (different sliced-leaf projections) still hit.
+
+    Value hashing forces a device→host transfer for device-resident
+    arrays — callers on the hot path should use :func:`leaf_key`, which
+    keys device arrays by buffer identity instead."""
     import numpy as np
 
     h = hashlib.sha256()
@@ -76,6 +80,47 @@ def leaf_fingerprint(arrays: Sequence, indices: Sequence[int] | None = None) -> 
         h.update(repr((int(i), a.shape, str(a.dtype))).encode())
         h.update(np.ascontiguousarray(a).tobytes())
     return h.hexdigest()
+
+
+def leaf_key(
+    arrays: Sequence, indices: Sequence[int] | None = None
+) -> tuple[str, tuple]:
+    """Cache key over leaf arrays that never forces a host transfer.
+
+    Device-resident ``jax.Array`` leaves are keyed by shape/dtype plus
+    the *committed buffer's identity* (``id`` of the immutable array
+    object): the same array object always holds the same values, so
+    identity subsumes value equality without touching the bytes.  Host
+    arrays (numpy and anything else) fall back to
+    :func:`leaf_fingerprint`-style value hashing — they are cheap to
+    hash and have no stable buffer identity.
+
+    Returns ``(digest, keepalive)``.  **The caller must store
+    ``keepalive`` alongside the cache entry**: it pins the identity-keyed
+    arrays so their ``id`` cannot be recycled by the allocator while the
+    entry is alive (a recycled id would alias a different buffer onto a
+    stale cache hit).  Equal-valued but distinct device arrays therefore
+    miss — the safe direction; a miss only costs one prologue
+    re-materialization."""
+    import jax
+    import numpy as np
+
+    h = hashlib.sha256()
+    keepalive = []
+    for i in range(len(arrays)) if indices is None else indices:
+        a = arrays[i]
+        if isinstance(a, jax.Array) and not isinstance(a, jax.core.Tracer):
+            h.update(
+                repr(
+                    ("dev", int(i), a.shape, str(a.dtype), id(a))
+                ).encode()
+            )
+            keepalive.append(a)
+        else:
+            a = np.asarray(a)
+            h.update(repr(("host", int(i), a.shape, str(a.dtype))).encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest(), tuple(keepalive)
 
 
 @dataclasses.dataclass
@@ -134,12 +179,15 @@ class PlanCache:
 
 class HoistCache(PlanCache):
     """LRU of materialized slice-invariant prologue tensors, keyed by
-    :func:`leaf_fingerprint` of the prologue's leaf arrays.
+    :func:`leaf_key` of the prologue's leaf arrays (device buffers by
+    identity — no host transfer; host arrays by value).
 
     One instance lives on each :class:`~repro.core.executor.
     ContractionPlan` (the hoisted buffers are only meaningful for that
-    plan's partition); the stored value is the list of hoisted device
-    arrays in ``partition.hoisted_nodes`` order."""
+    plan's partition); the stored value is ``(outputs, keepalive)`` —
+    the hoisted device arrays in ``partition.hoisted_nodes`` order plus
+    the key's keep-alive references, which must live exactly as long as
+    the entry so identity keys can never alias recycled buffers."""
 
 
 #: process-global cache used by :mod:`repro.core.api`

@@ -131,6 +131,14 @@ def lower_step(
 
     from ..core.executor import einsum_expr  # shared labeling convention
 
+    try:
+        expr = einsum_expr(inds_a, inds_b, inds_out)
+    except IndexError:
+        # more distinct indices than einsum subscript letters — only
+        # possible on paper-scale planning-only nodes (>= 2^52 FLOPs),
+        # which the refiner always routes to GEMM backends; the einsum
+        # fallback string is never consulted for them.
+        expr = ""
     return GemmForm(
         inds_a=tuple(inds_a),
         inds_b=tuple(inds_b),
@@ -146,7 +154,7 @@ def lower_step(
         m_shape=tuple(size_of(ix) for ix in m_inds),
         n_shape=tuple(size_of(ix) for ix in n_inds),
         k_shape=tuple(size_of(ix) for ix in k_inds),
-        expr=einsum_expr(inds_a, inds_b, inds_out),
+        expr=expr,
     )
 
 
@@ -160,31 +168,48 @@ def apply(spec, a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
     form: GemmForm = spec.form
     if spec.backend == "einsum":
         return jnp.einsum(form.expr, a, b)
-    a2 = jnp.transpose(a, form.perm_a).reshape(form.B, form.M, form.K)
-    b2 = jnp.transpose(b, form.perm_b).reshape(form.B, form.K, form.N)
-    real_bytes = real_component_bytes(jnp.result_type(a2.dtype, b2.dtype))
-    if spec.backend == "dot" or (spec.backend == "pallas" and real_bytes > 4):
-        # 64-bit components handed to a schedule refined for a narrower
-        # dtype would be silently truncated by the fp32 Pallas
-        # accumulator — keep them on XLA's full-precision dot.
-        out = jnp.matmul(a2, b2)
-    elif spec.backend == "pallas":
+    real_bytes = real_component_bytes(jnp.result_type(a.dtype, b.dtype))
+    if spec.backend == "pallas_fused" and real_bytes <= 4:
         from ..kernels import ops
 
-        mm = functools.partial(
-            ops.matmul,
-            bm=spec.bm,
-            bn=spec.bn,
-            bk=spec.bk,
+        # operands stay in their tree-native layouts: the kernel's
+        # index_maps apply perm_a/perm_b during tile loads, so the a2/b2
+        # HBM copies below never exist on this path.
+        out = ops.fused_matmul(
+            a, b,
+            perm_a=form.perm_a, perm_b=form.perm_b,
+            nb=len(form.batch_inds), nm=len(form.m_inds),
+            nn=len(form.n_inds), nk=len(form.k_inds),
+            bm=spec.bm, bn=spec.bn, bk=spec.bk,
             interpret=interpret,
-            min_kernel_dim=1,  # the refiner already gated tiny shapes out
         )
-        if form.B > 1:
-            out = jax.vmap(mm)(a2, b2)
-        else:
-            out = mm(a2[0], b2[0])[None]
     else:
-        raise ValueError(f"unknown lowering backend {spec.backend!r}")
+        a2 = jnp.transpose(a, form.perm_a).reshape(form.B, form.M, form.K)
+        b2 = jnp.transpose(b, form.perm_b).reshape(form.B, form.K, form.N)
+        if spec.backend == "dot" or real_bytes > 4:
+            # 64-bit components handed to a schedule refined for a
+            # narrower dtype would be silently truncated by the fp32
+            # Pallas accumulator — keep them on XLA's full-precision dot
+            # (this also catches a pallas_fused spec handed 64-bit
+            # arrays at trace time).
+            out = jnp.matmul(a2, b2)
+        elif spec.backend == "pallas":
+            from ..kernels import ops
+
+            mm = functools.partial(
+                ops.matmul,
+                bm=spec.bm,
+                bn=spec.bn,
+                bk=spec.bk,
+                interpret=interpret,
+                min_kernel_dim=1,  # the refiner already gated tiny shapes
+            )
+            if form.B > 1:
+                out = jax.vmap(mm)(a2, b2)
+            else:
+                out = mm(a2[0], b2[0])[None]
+        else:
+            raise ValueError(f"unknown lowering backend {spec.backend!r}")
     out = out.reshape(form.batch_shape + form.m_shape + form.n_shape)
     if form.out_perm != tuple(range(out.ndim)):
         out = jnp.transpose(out, form.out_perm)

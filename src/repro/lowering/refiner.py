@@ -31,11 +31,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from typing import Callable, Hashable, Sequence
 
 import jax.numpy as jnp
 
 from ..core.merging import TPU_HBM_BW, TPU_MXU, TPU_PEAK_FLOPS
+from ..kernels.contract_gemm import suffix_tile_split
 from .gemm_form import GemmForm, lower_step, real_component_bytes
 
 # candidate Pallas block edges (multiples of the MXU tile)
@@ -52,15 +54,49 @@ NON_MXU_PEAK_FRACTION = 0.125
 
 @dataclasses.dataclass(frozen=True)
 class GemmSpec:
-    """Refined, executable lowering of one contraction step."""
+    """Refined, executable lowering of one contraction step.
+
+    For ``backend="pallas_fused"`` the block shapes are the *effective*
+    axis-suffix tiles (see ``kernels.contract_gemm.suffix_tile_split``),
+    which divide (B, M, N, K) exactly — no padding FLOPs, no materialized
+    operand transpose.  ``transpose_bytes`` is the HBM permute traffic
+    this spec pays (0 for fused/einsum — the fused saving is what
+    ``LoweredSchedule.transpose_bytes_eliminated`` totals up).
+    """
 
     form: GemmForm
-    backend: str  # "pallas" | "dot" | "einsum"
+    backend: str  # "pallas" | "pallas_fused" | "dot" | "einsum"
     bm: int
     bn: int
     bk: int
     modeled_time_s: float
     pad_waste: float  # fraction of executed MXU FLOPs that are padding
+    transpose_bytes: float = 0.0  # HBM bytes moved permuting the operands
+
+
+def default_fused() -> bool:
+    """Whether the refiner may choose the fused transpose-GEMM backend:
+    the ``REPRO_FUSED_GEMM`` environment variable (CI runs the tier-1
+    gate under both values), defaulting to on.  ``REPRO_FUSED_GEMM=0``
+    is the off-switch back to the materialized permute + ``tiled_matmul``
+    reference path."""
+    v = os.environ.get("REPRO_FUSED_GEMM", "1")
+    if v not in ("0", "1"):
+        raise ValueError(f"REPRO_FUSED_GEMM={v!r} not in ('0', '1')")
+    return v == "1"
+
+
+def operand_transpose_bytes(form: GemmForm, dtype) -> float:
+    """HBM traffic of materializing the operand permutations: one read +
+    one write per operand whose native layout is not already in GEMM
+    order — the ``2*(|A|+|B|)*bytes`` the fused kernel eliminates."""
+    itemsize = jnp.dtype(dtype).itemsize
+    t = 0.0
+    if form.perm_a != tuple(range(len(form.perm_a))):
+        t += 2.0 * itemsize * form.B * form.M * form.K
+    if form.perm_b != tuple(range(len(form.perm_b))):
+        t += 2.0 * itemsize * form.B * form.K * form.N
+    return t
 
 
 def _ceil_to(x: float, t: int) -> float:
@@ -80,9 +116,15 @@ def modeled_step_time(
 ) -> tuple[float, float]:
     """(seconds, pad_waste) for one execution of this step.
 
-    Pallas is charged padded-tile FLOPs at full MXU peak; dot/einsum are
-    charged exact FLOPs at the non-MXU effective peak.  Both are capped
-    by the HBM roofline on the operand + output traffic.
+    Pallas is charged padded-tile FLOPs at full MXU peak; the fused
+    transpose-GEMM executes exact FLOPs (axis-suffix tiles never pad);
+    dot/einsum are charged exact FLOPs at the non-MXU effective peak.
+    All are capped by the HBM roofline on the operand + output traffic —
+    and the backends that materialize permuted operand copies
+    (``pallas``, ``dot``) additionally pay the ``2*(|A|+|B|)*bytes``
+    transpose bandwidth that the fused kernel (and XLA's fused einsum)
+    eliminates: a separate, non-overlappable HBM round-trip before the
+    GEMM proper.
     """
     n_real = _real_gemm_count(dtype, backend)
     flops = form.flops * n_real
@@ -102,10 +144,16 @@ def modeled_step_time(
         )
         t_compute = padded / TPU_PEAK_FLOPS
         waste = 1.0 - flops / padded
+    elif backend == "pallas_fused":
+        t_compute = flops / TPU_PEAK_FLOPS
+        waste = 0.0
     else:
         t_compute = flops / (TPU_PEAK_FLOPS * NON_MXU_PEAK_FRACTION)
         waste = 0.0
-    return max(t_compute, t_mem), waste
+    t = max(t_compute, t_mem)
+    if backend in ("pallas", "dot"):
+        t += operand_transpose_bytes(form, dtype) / TPU_HBM_BW
+    return t, waste
 
 
 def refine_step(
@@ -113,8 +161,18 @@ def refine_step(
     dtype,
     *,
     min_kernel_dim: int = TPU_MXU,
+    fused: bool | None = None,
 ) -> GemmSpec:
-    """Pick backend + block shapes for one normalized contraction step."""
+    """Pick backend + block shapes for one normalized contraction step.
+
+    ``fused`` gates the fused transpose-GEMM candidates (default:
+    :func:`default_fused`, i.e. ``REPRO_FUSED_GEMM``).  A fused candidate
+    is admissible when its effective axis-suffix tiles are still
+    MXU-sized — its cost model pays no padding FLOPs and no operand
+    transpose bandwidth, so it wins whenever admissible.
+    """
+    if fused is None:
+        fused = default_fused()
     real_bytes = real_component_bytes(dtype)
     if form.flops < EINSUM_FLOPS_FLOOR:
         t, w = modeled_step_time(form, dtype, "einsum", 1, 1, 1)
@@ -123,8 +181,11 @@ def refine_step(
     # truncated by the fp32 Pallas accumulator — keep them on XLA's dot.
     if min(form.M, form.N, form.K) < min_kernel_dim or real_bytes > 4:
         t, w = modeled_step_time(form, dtype, "dot", 1, 1, 1)
-        return GemmSpec(form, "dot", 0, 0, 0, t, w)
+        return GemmSpec(
+            form, "dot", 0, 0, 0, t, w, operand_transpose_bytes(form, dtype)
+        )
     best: GemmSpec | None = None
+    tbytes = operand_transpose_bytes(form, dtype)
     for bm in BLOCK_CANDIDATES:
         for bn in BLOCK_CANDIDATES:
             for bk in BLOCK_CANDIDATES:
@@ -132,7 +193,23 @@ def refine_step(
                     continue  # working set must stay VMEM-resident
                 t, w = modeled_step_time(form, dtype, "pallas", bm, bn, bk)
                 if best is None or t < best.modeled_time_s:
-                    best = GemmSpec(form, "pallas", bm, bn, bk, t, w)
+                    best = GemmSpec(form, "pallas", bm, bn, bk, t, w, tbytes)
+                if not fused:
+                    continue
+                # fused candidate at the same targets: effective tiles are
+                # the axis-suffix products, admissible while MXU-sized
+                _, _, tm = suffix_tile_split(form.m_shape, bm)
+                _, _, tn = suffix_tile_split(form.n_shape, bn)
+                _, _, tk = suffix_tile_split(form.k_shape, bk)
+                if min(tm, tn, tk) < min_kernel_dim:
+                    continue
+                if 4 * (tm * tk + tk * tn + tm * tn) > VMEM_BUDGET_BYTES:
+                    continue
+                tf, wf = modeled_step_time(
+                    form, dtype, "pallas_fused", tm, tn, tk
+                )
+                if tf < best.modeled_time_s:
+                    best = GemmSpec(form, "pallas_fused", tm, tn, tk, tf, wf)
     return best
 
 
@@ -165,18 +242,39 @@ class LoweredSchedule:
             padded += f / (1.0 - s.pad_waste) if s.pad_waste < 1.0 else f
         return 0.0 if padded == 0.0 else 1.0 - useful / padded
 
+    def transpose_bytes(self) -> float:
+        """HBM bytes this schedule spends materializing operand
+        permutations (per slice) — zero on fused/einsum nodes."""
+        return sum(s.transpose_bytes for s in self.specs)
+
+    def transpose_bytes_eliminated(self) -> float:
+        """HBM bytes of operand-transpose traffic the fused nodes avoid
+        (per slice): what the reference permute + ``tiled_matmul`` path
+        would have moved for every ``pallas_fused`` node."""
+        return sum(
+            operand_transpose_bytes(s.form, self.dtype)
+            for s in self.specs
+            if s.backend == "pallas_fused"
+        )
+
     def summary(self) -> dict:
         return {
             "nodes": len(self.specs),
             "backends": self.backend_counts(),
             "pad_waste": self.pad_waste(),
             "modeled_time_s": self.modeled_time_s,
+            "transpose_bytes": self.transpose_bytes(),
+            "transpose_bytes_eliminated": self.transpose_bytes_eliminated(),
             "dtype": self.dtype,
         }
 
     def summary_row(self) -> str:
         c = self.backend_counts()
-        per = " ".join(f"{k}={c[k]}" for k in ("pallas", "dot", "einsum") if k in c)
+        per = " ".join(
+            f"{k}={c[k]}"
+            for k in ("pallas_fused", "pallas", "dot", "einsum")
+            if k in c
+        )
         return (
             f"lowered[{self.dtype}]: {len(self.specs)} nodes ({per}) "
             f"pad_waste={self.pad_waste()*100:.1f}% "
@@ -190,13 +288,52 @@ def refine_schedule(
     dtype=jnp.complex64,
     *,
     min_kernel_dim: int = TPU_MXU,
+    fused: bool | None = None,
 ) -> LoweredSchedule:
     """Lower + refine every ``(inds_a, inds_b, inds_out)`` step."""
+    if fused is None:
+        fused = default_fused()
     specs = [
         refine_step(
             lower_step(ia, ib, io, size_of), dtype,
-            min_kernel_dim=min_kernel_dim,
+            min_kernel_dim=min_kernel_dim, fused=fused,
         )
         for ia, ib, io in steps
     ]
     return LoweredSchedule(specs, str(jnp.dtype(dtype)))
+
+
+def refine_tree_schedule(
+    tree,
+    smask: int = 0,
+    dtype=jnp.complex64,
+    *,
+    min_kernel_dim: int = TPU_MXU,
+    fused: bool | None = None,
+) -> LoweredSchedule:
+    """Refine the kernel schedule for every step of ``(tree, S)``
+    directly from the contraction tree — planner-side usage (modeled
+    benchmarks, cost projections) on instances too large to instantiate
+    an executor plan for.  Mirrors the executor's step construction:
+    sliced indices are fixed before lowering, the output index order
+    follows ``pair_contract_inds``."""
+    from ..core.executor import pair_contract_inds  # lazy: avoid cycle
+    from ..core.tensor_network import bits
+
+    space = tree.tn.space
+    sliced_labels = {space.labels[b] for b in bits(smask)}
+    open_set = frozenset(tree.tn.open_inds)
+    node_inds = {
+        i: tuple(ix for ix in tree.tn.inputs[i] if ix not in sliced_labels)
+        for i in range(tree.tn.num_tensors)
+    }
+    steps = []
+    for v in tree.contract_order():
+        l, r = tree.children[v]
+        _, out = pair_contract_inds(node_inds[l], node_inds[r], open_set)
+        steps.append((node_inds[l], node_inds[r], out))
+        node_inds[v] = out
+    return refine_schedule(
+        steps, tree.tn.size_of, dtype=dtype,
+        min_kernel_dim=min_kernel_dim, fused=fused,
+    )
