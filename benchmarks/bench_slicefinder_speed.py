@@ -38,7 +38,33 @@ def run(n_trees: int = 20, circuit: str = "syc-16") -> list[str]:
         f"greedy16_us={t_greedy_tot / n_trees * 1e6:.1f}"
     )
     rows.append(f"fig8_speedup_geomean,{geo:.1f},paper=100-200x")
+    rows.extend(plan_search_rows(circuit=circuit))
     return rows
+
+
+def plan_search_rows(circuit: str = "syc-16", max_evals: int = 16) -> list[str]:
+    """Planner-wall rows for the anytime co-optimizer: the in-place
+    lifetime slicer is what keeps one full (tree, S) evaluation — move +
+    re-slice + partition + certified peak — in the tens of milliseconds,
+    so an entire anytime search costs a handful of one-shot plans."""
+    from repro.core.pathfinder import random_greedy_tree
+    from repro.optimize import oneshot_plan, plan_search
+
+    from .common import timer as _timer
+
+    tn, _ = network_for(circuit)
+    w0 = random_greedy_tree(tn, repeats=8, seed=0).width()
+    target = max(w0 - 4, 8)
+    _, t_one = _timer(oneshot_plan, tn, target, seed=0)
+    res, t_search = _timer(
+        plan_search, tn, target, max_evals=max_evals, num_workers=4, seed=0
+    )
+    per_eval = t_search / max(1, res.evaluations)
+    return [
+        f"fig8_plansearch_per_eval_us,{per_eval * 1e6:.1f},"
+        f"evals={res.evaluations};oneshot_us={t_one * 1e6:.1f};"
+        f"search_vs_oneshot={t_search / max(t_one, 1e-9):.1f}x"
+    ]
 
 
 def main() -> None:

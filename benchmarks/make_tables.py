@@ -5,9 +5,12 @@ experiments/sampling/, the §Lowering backend table from the trajectory
 records ``benchmarks.bench_flops_efficiency`` appends under
 experiments/lowering/, the §Hoisting table (naive vs two-phase
 sliced execution) from the records ``benchmarks.bench_slicing_overhead``
-appends under experiments/hoisting/, and the §Memory table (peak-aware
+appends under experiments/hoisting/, the §Memory table (peak-aware
 slicer vs width proxy + fused transpose credit) from the records the
-same benchmark's ``memory_rows`` appends under experiments/memory/.
+same benchmark's ``memory_rows`` appends under experiments/memory/, and
+the §Co-optimizer table (one-shot pipeline vs anytime plan_search) from
+the records ``benchmarks.bench_slice_count.cooptimizer_rows`` appends
+under experiments/optimize/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -209,6 +212,43 @@ def print_memory_table(memory_dir="experiments/memory") -> None:
         )
 
 
+def print_optimize_table(optimize_dir="experiments/optimize") -> None:
+    """§Co-optimizer rows: one-shot staged pipeline vs the anytime
+    path–slice co-optimizer at equal evaluation budget and equal
+    certified-peak byte budget, one row per trajectory record."""
+    paths = sorted(glob.glob(os.path.join(optimize_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows.extend(rec.get("records", []))
+    if not rows:
+        return
+    print("\n### Anytime path–slice co-optimizer "
+          "(one-shot pipeline vs plan_search, equal certified-peak "
+          "budget)\n")
+    print("| workload | evals | \\|S\\| one-shot → co-opt | "
+          "log2 executed FLOPs (hoist-aware) | improvement | "
+          "certified peak → budget | plan wall one-shot → search |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "log2_flops_oneshot" not in r:
+            continue
+        print(
+            f"| {r.get('workload', '-')} "
+            f"| {r.get('max_evals', '-')} "
+            f"| {r['num_sliced_oneshot']} → {r['num_sliced_coopt']} "
+            f"| {r['log2_flops_oneshot']:.2f} → "
+            f"{r['log2_flops_coopt']:.2f} "
+            f"| {r['improvement']:.2f}× "
+            f"| {fmt_bytes(r['peak_bytes_coopt'])} → "
+            f"{fmt_bytes(r['budget_bytes'])} "
+            f"| {fmt_s(r.get('wall_oneshot_s'))} → "
+            f"{fmt_s(r.get('wall_search_s'))} |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -262,6 +302,7 @@ def main() -> None:
     print_lowering_table()
     print_hoisting_table()
     print_memory_table()
+    print_optimize_table()
 
 
 if __name__ == "__main__":

@@ -28,12 +28,8 @@ from .executor import (
     default_hoist,
     simplify_network,
 )
-from .lifetime import detect_stem
-from .merging import merge_branches, modeled_tree_time, orient_gemms
-from .pathfinder import random_greedy_tree
-from .slicing import find_slices
+from .merging import modeled_tree_time
 from .tensor_network import popcount
-from .tuning import tuning_slice_finder
 
 
 def _fmt_bytes(b: float) -> str:
@@ -74,6 +70,10 @@ class PlanReport:
     peak_bytes_hoisted: int = 0  # live-set peak under two-phase execution
     buffer_slots: int = 0  # linear-scan slot count (naive subtask)
     transpose_bytes_saved: float = 0.0  # HBM bytes fused kernels avoid/slice
+    # anytime path–slice co-optimizer metrics (PR 5)
+    optimize: str = "oneshot"  # planner mode: oneshot | anytime
+    search_evals: int = 0  # candidate evaluations the search spent
+    search_trace: list | None = None  # best-so-far improvements (dicts)
 
     def row(self) -> str:
         row = (
@@ -89,6 +89,8 @@ class PlanReport:
                 f"[inv={self.invariant_fraction:.2f}"
                 f" ov={self.measured_overhead:.3f}]"
             )
+        if self.optimize != "oneshot":
+            row += f" opt={self.optimize}[evals={self.search_evals}]"
         if self.peak_bytes:
             row += f" peak={_fmt_bytes(self.peak_bytes)}"
             if self.peak_bytes_hoisted != self.peak_bytes:
@@ -125,6 +127,11 @@ def plan_contraction(
     seed: int = 0,
     slicing_mode: str = "width",
     itemsize: int = 8,
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
 ):
     """Full planning pipeline on a tensor network.
 
@@ -132,27 +139,48 @@ def plan_contraction(
     lifetime-based memory plan's live-set peak instead of the width
     proxy (see :func:`repro.core.slicing.refine_slices_for_peak`):
     indices the true peak never needed are dropped, shrinking the
-    ``2^|S|`` subtask count at the same byte budget."""
-    from .slicing import refine_slices_for_peak
+    ``2^|S|`` subtask count at the same byte budget.
+
+    ``optimize="anytime"`` replaces the staged pipeline with the
+    path–slice–memory co-optimizer (:func:`repro.optimize.plan_search`):
+    the slicer is re-invoked in place after every accepted tree move and
+    candidates are scored by hoist-aware executed FLOPs under the
+    certified peak budget.  ``search_evals`` / ``search_wall_s`` are the
+    anytime budgets (stopping early always yields a plan no worse than
+    the one-shot seed); the returned report carries the improvement
+    trace in ``PlanReport.search_trace``."""
+    from ..optimize import oneshot_plan, plan_search
 
     t0 = time.perf_counter()
-    tree = random_greedy_tree(tn, repeats=repeats, seed=seed)
-    width0 = tree.width()
-    if tune and method == "lifetime":
-        res = tuning_slice_finder(tree, target_dim)
-        tree, smask = res.tree, res.smask
-    else:
-        smask = find_slices(tree, target_dim, method=method, seed=seed)
-    if merge:
-        tree = merge_branches(tree, smask).tree
-        smask = find_slices(tree, target_dim, method=method, seed=seed)
-    tree = orient_gemms(tree)
-    if slicing_mode == "peak" and smask:
-        smask = refine_slices_for_peak(
-            tree, smask, target_dim, itemsize=itemsize
+    search_trace = None
+    if optimize == "anytime":
+        sr = plan_search(
+            tn,
+            target_dim,
+            budget_bytes=budget_bytes,
+            itemsize=itemsize,
+            num_workers=search_workers,
+            max_evals=search_evals,
+            wall_clock_s=search_wall_s,
+            seed=seed,
+            method=method,
+            tune=tune,
+            merge=merge,
+            repeats=repeats,
+            slicing_mode=slicing_mode,
         )
-    elif slicing_mode != "width":
-        raise ValueError(f"unknown slicing_mode {slicing_mode!r}")
+        tree, smask = sr.tree, sr.smask
+        width0 = sr.width_before  # raw greedy seed width, as in oneshot
+        search_trace = [dataclasses.asdict(t) for t in sr.trace]
+    elif optimize == "oneshot":
+        shot = oneshot_plan(
+            tn, target_dim, method=method, tune=tune, merge=merge,
+            repeats=repeats, seed=seed, slicing_mode=slicing_mode,
+            itemsize=itemsize, budget_bytes=budget_bytes,
+        )
+        tree, smask, width0 = shot.tree, shot.smask, shot.width_before
+    else:
+        raise ValueError(f"unknown optimize {optimize!r}")
     wall = time.perf_counter() - t0
     naive_overhead = tree.slicing_overhead(smask)
     hoist_on = default_hoist()
@@ -186,6 +214,9 @@ def plan_contraction(
         peak_bytes=mem.peak_bytes,
         peak_bytes_hoisted=mem.peak_bytes_hoisted,
         buffer_slots=mem.buffer_slots,
+        optimize=optimize,
+        search_evals=sr.evaluations if optimize == "anytime" else 0,
+        search_trace=search_trace,
     )
     return tree, smask, report
 
@@ -202,6 +233,11 @@ def plan_compiled(
     seed: int = 0,
     use_cache: bool = True,
     slicing_mode: str = "width",
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
 ) -> tuple[ContractionPlan, PlanReport]:
     """Plan + lower a network into an executable :class:`ContractionPlan`,
     consulting the compiled-plan cache.
@@ -213,6 +249,15 @@ def plan_compiled(
     along, which is what makes a hit skip retracing, not just planning.
     The slicing mask ``S`` is part of the cached artifact (it is a
     deterministic function of the key).
+
+    ``optimize="anytime"`` plans through the co-optimizer
+    (:func:`repro.optimize.plan_search`); the search parameters join the
+    fingerprint, so a search *result* is cache-addressable — repeated
+    requests for the same circuit family at the same budgets reuse the
+    searched plan without re-running the search.  A wall-clock budget
+    (``search_wall_s``) makes the searched plan machine-dependent, so
+    such plans are still cached but only deterministic across processes
+    when ``search_wall_s=None``.
     """
     from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
     from ..lowering.refiner import default_fused
@@ -226,11 +271,20 @@ def plan_compiled(
     if use_cache:
         # REPRO_FUSED_GEMM changes the refined schedule, so it is part of
         # the key (like the backend itself)
+        # search params only shape the plan under optimize="anytime" —
+        # keep them out of the oneshot key so ignored knobs cannot
+        # cause spurious cache misses
+        search_key = (
+            (search_evals, search_workers, search_wall_s)
+            if optimize == "anytime"
+            else ()
+        )
         key = network_fingerprint(
             tn,
             dtype,
             extra=(backend, target_dim, method, tune, merge, repeats, seed,
-                   slicing_mode, default_fused()),
+                   slicing_mode, default_fused(), optimize, budget_bytes,
+                   search_key),
         )
         ent = PLAN_CACHE.get(key)
         if ent is not None:
@@ -247,12 +301,21 @@ def plan_compiled(
                 cache_misses=stats["misses"],
                 hoist=hoist_on,
                 measured_overhead=ent.plan.executed_overhead(hoist_on),
+                # copy the one mutable field so a caller mutating its
+                # report can never corrupt the cached template
+                search_trace=(
+                    [dict(t) for t in ent.report.search_trace]
+                    if ent.report.search_trace is not None
+                    else None
+                ),
             )
             return ent.plan, report
     tree, smask, report = plan_contraction(
         tn, target_dim, method=method, tune=tune, merge=merge,
         repeats=repeats, seed=seed, slicing_mode=slicing_mode,
-        itemsize=dtype.itemsize,
+        itemsize=dtype.itemsize, optimize=optimize,
+        search_evals=search_evals, search_workers=search_workers,
+        search_wall_s=search_wall_s, budget_bytes=budget_bytes,
     )
     plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
     report.backend = plan.backend
@@ -288,6 +351,11 @@ def plan_compiled(
             report,
             cache_hits=stats["hits"],
             cache_misses=stats["misses"],
+            search_trace=(
+                [dict(t) for t in report.search_trace]
+                if report.search_trace is not None
+                else None
+            ),
         )
     return plan, report
 
@@ -305,6 +373,11 @@ def simulate_amplitude(
     use_cache: bool = True,
     hoist: bool | None = None,
     slicing_mode: str = "width",
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
 ) -> SimulationResult:
     """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
 
@@ -314,6 +387,9 @@ def simulate_amplitude(
     (slice-invariant hoisted) execution, default ``REPRO_HOIST``.  Two
     calls on the same circuit share one compiled plan via the plan cache
     (different bitstrings change leaf *values*, never network structure).
+    ``optimize="anytime"`` plans via the path–slice co-optimizer
+    (:func:`repro.optimize.plan_search`) with ``search_evals``
+    evaluations over ``search_workers`` annealing workers.
     """
     from ..quantum.circuits import circuit_to_network  # avoid import cycle
 
@@ -330,6 +406,11 @@ def simulate_amplitude(
         seed=seed,
         use_cache=use_cache,
         slicing_mode=slicing_mode,
+        optimize=optimize,
+        search_evals=search_evals,
+        search_workers=search_workers,
+        search_wall_s=search_wall_s,
+        budget_bytes=budget_bytes,
     )
     sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
     value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
@@ -362,6 +443,11 @@ def sample_bitstrings(
     use_cache: bool = True,
     hoist: bool | None = None,
     slicing_mode: str = "width",
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
 ):
     """Draw correlated bitstring samples from one batched contraction —
     the paper's flagship workload (Sec. VI: 1M correlated Sycamore samples).
@@ -433,6 +519,11 @@ def sample_bitstrings(
         seed=seed,
         use_cache=use_cache,
         slicing_mode=slicing_mode,
+        optimize=optimize,
+        search_evals=search_evals,
+        search_workers=search_workers,
+        search_wall_s=search_wall_s,
+        budget_bytes=budget_bytes,
     )
     amps = batch_mod.contract_amplitude_batch(
         plan, arrays, slice_batch=slice_batch, mesh=mesh,

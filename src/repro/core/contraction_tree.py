@@ -15,6 +15,7 @@ with incremental mask updates.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterable, Sequence
 
 from .tensor_network import TensorNetwork, bits, popcount
@@ -89,6 +90,10 @@ class ContractionTree:
 
     def width(self) -> int:
         return max(popcount(m) for m in self.emask.values())
+
+    def node_cost(self, v: int) -> float:
+        """2^|s_node| — one term of Eq. 3."""
+        return 2.0 ** popcount(self.node_mask(v))
 
     def cost_log2s(self) -> dict[int, int]:
         return {v: popcount(self.node_mask(v)) for v in self.children}
@@ -222,6 +227,137 @@ class ContractionTree:
         self.emask[q] = self._result_mask(self.emask[l], self.emask[r])
         self._refresh_up(p)
         return q
+
+    # ------------------------------------------------------------------
+    # subtree splice (reconfiguration surgery for the anytime co-optimizer)
+    # ------------------------------------------------------------------
+    def subtree_frontier(self, v: int, max_roots: int = 8) -> list[int]:
+        """A frontier of subtree roots under ``v``: start from v's two
+        children and repeatedly expand the *most expensive* internal
+        frontier member until ``max_roots`` roots (or all leaves).  The
+        frontier partitions the leaves under ``v``, so any pairwise
+        order over it rebuilds a valid subtree with the same result
+        mask.  Deterministic (ties broken by node id)."""
+        assert not self.is_leaf(v), "frontier needs an internal node"
+        frontier = list(self.children[v])
+        while len(frontier) < max_roots:
+            cands = [u for u in frontier if not self.is_leaf(u)]
+            if not cands:
+                break
+            u = max(cands, key=lambda u_: (self.node_cost(u_), u_))
+            frontier.remove(u)
+            frontier.extend(self.children[u])
+        return frontier
+
+    def _internal_between(self, v: int, frontier: Sequence[int]) -> list[int]:
+        """Internal nodes of the subtree at ``v`` above the frontier
+        (``v`` included, frontier roots excluded)."""
+        stop = set(frontier)
+        out: list[int] = []
+        stack = [v]
+        while stack:
+            u = stack.pop()
+            assert not self.is_leaf(u), "frontier does not cover subtree"
+            out.append(u)
+            for c in self.children[u]:
+                if c not in stop:
+                    stack.append(c)
+        return out
+
+    def splice_subtree(
+        self,
+        v: int,
+        frontier: Sequence[int],
+        ssa_pairs: Sequence[tuple[int, int]],
+    ) -> "SpliceResult":
+        """Rebuild the internal structure joining ``frontier`` up to ``v``
+        along a new pairwise order, in place.
+
+        ``ssa_pairs`` is an SSA path over *positions*: entry ``j`` pairs
+        two members of the growing list ``frontier + results``, its
+        result taking position ``len(frontier) + j``.  The freed internal
+        ids are recycled (the last rebuilt node is ``v`` itself, so the
+        linkage above ``v`` never changes), and ``emask[v]`` is invariant
+        — the leaf set under ``v`` is untouched — so no upward refresh is
+        needed.  Returns a :class:`SpliceResult` carrying the undo record
+        and the local Eq. 3 cost delta; :meth:`unsplice` reverts the
+        surgery exactly."""
+        frontier = list(frontier)
+        internal = self._internal_between(v, frontier)
+        if len(ssa_pairs) != len(frontier) - 1 or len(internal) != len(
+            ssa_pairs
+        ):
+            raise ValueError(
+                f"splice needs |frontier|-1 = {len(frontier) - 1} pairs "
+                f"over {len(internal)} recycled ids"
+            )
+        # validate the whole SSA sequence BEFORE the first mutation, so a
+        # bad input raises with the tree untouched (no undo needed)
+        used: set[int] = set()
+        for j, (pa, pb) in enumerate(ssa_pairs):
+            if pa == pb or pa in used or pb in used:
+                raise ValueError(f"ssa pair {j} reuses a position")
+            if not (0 <= pa < len(frontier) + j and 0 <= pb < len(frontier) + j):
+                raise ValueError(f"ssa pair {j} out of range")
+            used.update((pa, pb))
+        old_children = {u: self.children[u] for u in internal}
+        old_emask = {u: self.emask[u] for u in internal}
+        old_parent = {u: self.parent.get(u) for u in frontier}
+        cost_before = sum(self.node_cost(u) for u in internal)
+        # recycle ids; v must come last so the subtree root keeps its id
+        recycled = sorted(u for u in internal if u != v) + [v]
+        ids = list(frontier)
+        for j, (pa, pb) in enumerate(ssa_pairs):
+            a, b = ids[pa], ids[pb]
+            nid = recycled[j]
+            self.children[nid] = (a, b)
+            self.parent[a] = nid
+            self.parent[b] = nid
+            self.emask[nid] = self._result_mask(self.emask[a], self.emask[b])
+            ids.append(nid)
+        assert ids[-1] == v
+        assert self.emask[v] == old_emask[v], "leaf cover changed by splice"
+        cost_after = sum(self.node_cost(u) for u in internal)
+        return SpliceResult(
+            v=v,
+            frontier=tuple(frontier),
+            rebuilt=tuple(recycled),
+            old_children=old_children,
+            old_emask=old_emask,
+            old_parent=old_parent,
+            cost_before=cost_before,
+            cost_after=cost_after,
+        )
+
+    def unsplice(self, res: "SpliceResult") -> None:
+        """Exactly revert a :meth:`splice_subtree` (cheap: only the
+        rebuilt internal nodes and their child links are restored)."""
+        for u, (l, r) in res.old_children.items():
+            self.children[u] = (l, r)
+            self.parent[l] = u
+            self.parent[r] = u
+            self.emask[u] = res.old_emask[u]
+        for u, p in res.old_parent.items():
+            if p is not None:
+                self.parent[u] = p
+
+
+@dataclasses.dataclass(frozen=True)
+class SpliceResult:
+    """Undo record + incremental deltas for one subtree splice."""
+
+    v: int
+    frontier: tuple[int, ...]
+    rebuilt: tuple[int, ...]
+    old_children: dict[int, tuple[int, int]]
+    old_emask: dict[int, int]
+    old_parent: dict[int, int | None]
+    cost_before: float  # Σ 2^|s_node| over the rebuilt region, before
+    cost_after: float  # … after — total_cost delta without a full resum
+
+    @property
+    def cost_delta(self) -> float:
+        return self.cost_after - self.cost_before
 
 
 def ssa_to_linear(ssa_path: Sequence[tuple[int, int]], n: int) -> list[tuple[int, int]]:

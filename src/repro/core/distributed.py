@@ -22,7 +22,7 @@ Because subtasks are independent and enumerable, the slice axis is
 (padding handles the remainder), which is also the fault-tolerance story —
 a lost device's slice range is re-executed elsewhere (work stealing at the
 granularity of slice ids), and a checkpoint is just the set of completed
-slice ranges plus the partial sum.
+slice ids plus the partial sum (id-keyed, so a resume may re-chunk freely).
 """
 
 from __future__ import annotations
@@ -78,11 +78,17 @@ def contract_sharded(
     for ax in axis_names:
         ndev *= mesh.shape[ax]
     n_slices = 1 << plan.num_sliced
-    chunk = ndev * max(1, slice_batch)
+    slice_batch = max(1, min(slice_batch, n_slices))
+    chunk = ndev * slice_batch
     total = -(-n_slices // chunk) * chunk  # ceil to a multiple
-    # pad with wrapped-around slice ids and a 0/1 validity weight
+    # Ragged-batch contract: padding to a multiple of ndev*slice_batch is
+    # what guarantees every device's local id chunk reshapes exactly into
+    # (n_batches, slice_batch) — no divisibility assumption on n_slices.
+    # pad with wrapped-around slice ids masked out by a boolean validity
+    # mask (jnp.where, not a multiply: 0 * NaN/Inf would leak the padded
+    # contribution into the sum, and a weight multiply is dtype-lossy)
     ids = np.arange(total, dtype=np.int32) % n_slices
-    valid = (np.arange(total) < n_slices).astype(np.complex64)
+    valid = np.arange(total) < n_slices
 
     hoist = default_hoist() if hoist is None else bool(hoist)
     hoist = hoist and plan.can_hoist
@@ -94,7 +100,7 @@ def contract_sharded(
     spec = P(axis_names)
 
     cache = getattr(plan, "_compiled", None)
-    key = ("sharded", mesh, tuple(axis_names), max(1, slice_batch), hoist)
+    key = ("sharded", mesh, tuple(axis_names), slice_batch, hoist)
     cached = cache.get(key) if cache is not None else None
     if cached is not None:
         return cached(
@@ -109,15 +115,20 @@ def contract_sharded(
                 arrs, sid, hbufs if hoist else None
             )
             batched = jax.vmap(contract)
-            idb = ids_local.reshape(-1, max(1, slice_batch))
-            vb = valid_local.reshape(-1, max(1, slice_batch))
+            idb = ids_local.reshape(-1, slice_batch)
+            vb = valid_local.reshape(-1, slice_batch)
 
             out_shape = jax.eval_shape(lambda: contract(jnp.int32(0)))
             wshape = (-1,) + (1,) * len(out_shape.shape)
 
             def body(acc, iv):
-                sids, w = iv
-                contrib = batched(sids) * w.reshape(wshape)
+                sids, ok = iv
+                contrib = batched(sids)
+                contrib = jnp.where(
+                    ok.reshape(wshape),
+                    contrib,
+                    jnp.zeros((), contrib.dtype),
+                )
                 return acc + jnp.sum(contrib, axis=0), None
 
             acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
@@ -142,21 +153,69 @@ def contract_sharded(
 
 @dataclasses.dataclass
 class SliceRangeCheckpoint:
-    """Fault-tolerance unit for long contractions: completed slice ranges
-    plus the running partial sum.  Restart = re-enqueue missing ranges."""
+    """Fault-tolerance unit for long contractions: completed slice ids
+    (stored as canonical merged ``[start, end)`` intervals) plus the
+    running partial sum.  Restart = re-enqueue the missing ids.
+
+    **Resume-chunk contract**: completion is tracked by slice *id* — the
+    intervals are merged independently of how work was chunked — so
+    :meth:`missing` is chunk-agnostic: a checkpoint written with
+    ``chunk=k1`` resumes correctly under any ``chunk=k2`` (the old
+    range-*keyed* ``done`` re-ran already-summed slices on a chunk
+    change and double-counted them into ``partial``).  Storage stays
+    O(#intervals), never O(2^|S|): completed work coalesces into a few
+    tuples even for paper-scale slice counts.  ``done`` also accepts
+    bare ids and unmerged/overlapping tuples (e.g. a legacy checkpoint);
+    everything is canonicalized on use."""
 
     n_slices: int
-    done: set[tuple[int, int]]
+    done: set
     partial: np.ndarray | complex
 
+    def _intervals(self) -> list[tuple[int, int]]:
+        """Sorted disjoint ``[start, end)`` intervals covering ``done``."""
+        iv: list[tuple[int, int]] = []
+        for d in self.done:
+            if isinstance(d, tuple):
+                if d[1] > d[0]:
+                    iv.append((int(d[0]), int(d[1])))
+            else:
+                iv.append((int(d), int(d) + 1))
+        iv.sort()
+        merged: list[tuple[int, int]] = []
+        for s, e in iv:
+            if merged and s <= merged[-1][1]:
+                if e > merged[-1][1]:
+                    merged[-1] = (merged[-1][0], e)
+            else:
+                merged.append((s, e))
+        return merged
+
+    def done_ids(self) -> set[int]:
+        """Completed slice ids, materialized (tests/introspection on
+        small checkpoints — prefer :meth:`_intervals` at scale)."""
+        return {i for s, e in self._intervals() for i in range(s, e)}
+
+    def add_range(self, start: int, end: int) -> None:
+        """Record ids ``[start, end)`` as summed into ``partial``."""
+        self.done.add((int(start), int(end)))
+        self.done = set(self._intervals())
+
     def missing(self, chunk: int) -> list[tuple[int, int]]:
-        out = []
-        s = 0
-        while s < self.n_slices:
-            e = min(s + chunk, self.n_slices)
-            if (s, e) not in self.done:
-                out.append((s, e))
-            s = e
+        """Maximal runs of not-yet-done slice ids, capped at ``chunk``
+        length.  Ranges need not align to any previous chunking."""
+        out: list[tuple[int, int]] = []
+        pos = 0
+        bounds = [
+            (min(s, self.n_slices), min(e, self.n_slices))
+            for s, e in self._intervals()
+        ] + [(self.n_slices, self.n_slices)]
+        for s, e in bounds:
+            while pos < s:
+                nxt = min(pos + chunk, s)
+                out.append((pos, nxt))
+                pos = nxt
+            pos = max(pos, e)
         return out
 
 
@@ -177,7 +236,10 @@ def contract_resumable(
     ``REPRO_HOIST``) is what keeps the prologue out of the per-slice
     loop — it is materialized once and fed to every call.  A restart
     re-derives it from the same leaf arrays (pure function), so the
-    checkpoint stays just the slice ranges + partial sum.
+    checkpoint stays just the completed slice ids + partial sum — and
+    because completion is id-keyed, a resume may use a *different*
+    ``chunk`` than the run that wrote the checkpoint (see
+    :class:`SliceRangeCheckpoint`).
 
     ``fail_on``: slice-range starts that raise (simulated node failure) the
     first time they run.
@@ -215,5 +277,5 @@ def contract_resumable(
             r = contract(list(arrays), list(hoisted), jnp.int32(sid))
             acc = r if acc is None else acc + r
         state.partial = state.partial + np.asarray(acc)
-        state.done.add((s, e))
+        state.add_range(s, e)
     return state.partial, state

@@ -285,8 +285,10 @@ class ContractionPlan:
         # repeated sampler calls on one open-qubit batch network)
         from ..lowering.cache import HoistCache  # lazy: avoid cycle
 
+        hoist_bytes = os.environ.get("REPRO_HOIST_CACHE_BYTES", "")
         self._hoist_cache = HoistCache(
-            maxsize=int(os.environ.get("REPRO_HOIST_CACHE_SIZE", "8"))
+            maxsize=int(os.environ.get("REPRO_HOIST_CACHE_SIZE", "8")),
+            max_bytes=int(hoist_bytes) if hoist_bytes else None,
         )
         # lifetime-based buffer plan (lazy: the slicer may have built one
         # already at planning time, but the executor's copy uses the
@@ -520,9 +522,15 @@ class ContractionPlan:
             ids = jnp.asarray(
                 np.arange(total, dtype=np.int32) % n_slices
             ).reshape(n_batches, slice_batch)
-            w = jnp.asarray(
-                (np.arange(total) < n_slices).astype(np.float32)
-            ).reshape(n_batches, slice_batch)
+            # boolean validity mask for the wrapped-around padding lanes.
+            # Masking must be a select, NOT a weight multiply: a NaN/Inf
+            # in a padded contribution leaks through ``0 * NaN == NaN``
+            # (e.g. a legitimately overflowing slice would corrupt the
+            # whole sum), and the float32 weight multiply is dtype-lossy
+            # under x64.
+            w = jnp.asarray(np.arange(total) < n_slices).reshape(
+                n_batches, slice_batch
+            )
 
             @jax.jit
             def run(arrs, hbufs):
@@ -536,8 +544,10 @@ class ContractionPlan:
                     chunk, wk = chunk_w
                     contrib = batched(chunk)
                     if padded:
-                        contrib = contrib * wk.reshape(
-                            (-1,) + (1,) * (contrib.ndim - 1)
+                        contrib = jnp.where(
+                            wk.reshape((-1,) + (1,) * (contrib.ndim - 1)),
+                            contrib,
+                            jnp.zeros((), contrib.dtype),
                         )
                     return acc + jnp.sum(contrib, axis=0), None
 

@@ -25,6 +25,12 @@ from .contraction_tree import ContractionTree
 from .tensor_network import TensorNetwork, bits, popcount
 
 
+def _gumbel(rng: random.Random) -> float:
+    """Standard Gumbel noise — the Boltzmann-randomization primitive
+    shared by the greedy pathfinder and the reconfiguration moves."""
+    return -math.log(-math.log(rng.random() + 1e-12) + 1e-12)
+
+
 # ----------------------------------------------------------------------
 # greedy
 # ----------------------------------------------------------------------
@@ -51,8 +57,7 @@ def greedy_ssa_path(
         r = result(ma, mb)
         s = 2.0 ** popcount(r) - 2.0 ** popcount(ma) - 2.0 ** popcount(mb)
         if temperature > 0.0:
-            gumbel = -math.log(-math.log(rng.random() + 1e-12) + 1e-12)
-            s -= temperature * gumbel * max(abs(s), 1.0)
+            s -= temperature * _gumbel(rng) * max(abs(s), 1.0)
         return s
 
     heap: list[tuple[float, int, int]] = []
@@ -119,6 +124,109 @@ def random_greedy_tree(
             best, best_cost = tree, c
     assert best is not None
     return best
+
+
+# ----------------------------------------------------------------------
+# local reconfiguration moves (anytime co-optimizer, repro.optimize)
+# ----------------------------------------------------------------------
+def local_ssa_order(
+    masks: Sequence[int],
+    open_m: int,
+    rng: random.Random | None = None,
+    temperature: float = 0.0,
+) -> list[tuple[int, int]]:
+    """Greedy pairwise order over a small set of tensors, as an SSA path
+    over *positions* (result of pair ``j`` takes position
+    ``len(masks) + j``) — the format :meth:`ContractionTree.
+    splice_subtree` consumes.  Minimizes result size, prefers connected
+    pairs, with optional Boltzmann noise for randomized reconfiguration
+    moves."""
+    masks = list(masks)
+    alive = list(range(len(masks)))
+    pairs: list[tuple[int, int]] = []
+
+    def result(ma: int, mb: int) -> int:
+        return (ma ^ mb) | (ma & mb & open_m)
+
+    while len(alive) > 1:
+        best = None
+        best_s = float("inf")
+        for i in range(len(alive)):
+            for j in range(i + 1, len(alive)):
+                ma, mb = masks[alive[i]], masks[alive[j]]
+                shared = popcount(ma & mb & ~open_m)
+                s = 2.0 ** popcount(result(ma, mb))
+                if not shared:
+                    s *= 1e6  # prefer connected pairs
+                if temperature > 0.0 and rng is not None:
+                    s *= math.exp(-temperature * _gumbel(rng))
+                if s < best_s:
+                    best_s, best = s, (i, j)
+        i, j = best
+        pa, pb = alive[i], alive[j]
+        masks.append(result(masks[pa], masks[pb]))
+        pairs.append((pa, pb))
+        alive = [x for k, x in enumerate(alive) if k not in (i, j)]
+        alive.append(len(masks) - 1)
+    return pairs
+
+
+def reconfigure_subtree(
+    tree: ContractionTree,
+    rng: random.Random,
+    max_roots: int = 8,
+    temperature: float = 0.3,
+):
+    """One subtree-reconfiguration move: pick an internal node (sampled
+    with probability proportional to its contraction cost, so expensive
+    regions are reworked most often), cut its subtree at a ≤``max_roots``
+    frontier, and splice a freshly searched local order back in place.
+
+    Returns the :class:`~repro.core.contraction_tree.SpliceResult` (undo
+    record + incremental cost delta), or ``None`` when no productive
+    region exists.  The caller owns accept/reject:
+    ``tree.unsplice(result)`` reverts the move exactly."""
+    internal = tree.internal_nodes()
+    if not internal:
+        return None
+    # cost-weighted sample over log2 costs (avoids overflow on wide trees)
+    log2s = [(popcount(tree.node_mask(v)), v) for v in internal]
+    top = max(c for c, _ in log2s)
+    weights = [2.0 ** (c - top) for c, _ in log2s]
+    r = rng.random() * sum(weights)
+    v = log2s[-1][1]
+    for w, (_, cand) in zip(weights, log2s):
+        r -= w
+        if r <= 0:
+            v = cand
+            break
+    frontier = tree.subtree_frontier(v, max_roots=max_roots)
+    if len(frontier) < 3:
+        return None
+    pairs = local_ssa_order(
+        [tree.emask[f] for f in frontier],
+        tree.tn.open_mask,
+        rng=rng,
+        temperature=temperature,
+    )
+    return tree.splice_subtree(v, frontier, pairs)
+
+
+def boltzmann_restart_tree(
+    tn: TensorNetwork,
+    rng: random.Random,
+    temperatures: Sequence[float] = (0.0, 0.2, 0.5, 1.0),
+) -> ContractionTree:
+    """A fresh greedy tree at a randomly drawn Boltzmann temperature —
+    the co-optimizer's escape hatch out of a stalled basin."""
+    return ContractionTree.from_ssa_path(
+        tn,
+        greedy_ssa_path(
+            tn,
+            seed=rng.randrange(1 << 31),
+            temperature=rng.choice(list(temperatures)),
+        ),
+    )
 
 
 # ----------------------------------------------------------------------

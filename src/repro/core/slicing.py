@@ -298,11 +298,10 @@ def refine_slices_for_peak(
     ``|S_peak| <= |S_width|`` always, with strict improvement whenever
     the width pipeline sliced an index the true peak never needed.
     """
-    from ..lowering.memory import plan_memory  # lazy: avoid import cycle
+    from ..lowering.memory import certified_peak as _peak  # lazy: cycle
 
     def certified_peak(mask: int) -> int:
-        mem = plan_memory(tree, mask, itemsize)
-        return max(mem.peak_bytes, mem.peak_bytes_hoisted)
+        return _peak(tree, mask, itemsize)
 
     if budget_bytes is None:
         budget_bytes = max(
@@ -345,6 +344,59 @@ def refine_slices_for_peak(
             return S
         b = min(removable, key=lambda b_: (tree.sliced_cost(S & ~(1 << b_)), b_))
         S &= ~(1 << b)
+    return S
+
+
+def reslice(
+    tree: ContractionTree,
+    target_dim: int,
+    warm: int = 0,
+    mode: str = "width",
+    itemsize: int = 8,
+    budget_bytes: int | None = None,
+    compare_fresh: bool = True,
+) -> int:
+    """Incremental re-slice after a tree move, warm-starting from the
+    previous mask — the in-place slicer invocation the anytime
+    co-optimizer (:mod:`repro.optimize`) runs after every accepted tree
+    mutation.
+
+    The warm mask is adapted to the new tree: bits are first topped up
+    to restore the width bound (the move may have widened an edge), then
+    greedily pruned while the bound holds (the move may have shortened a
+    lifetime, making a previously needed bit redundant — pruning halves
+    the subtask count per dropped bit).  With ``compare_fresh`` a fresh
+    :func:`slice_finder` pass also runs and the cheaper mask (Eq. 6)
+    wins, so warm starting never costs quality; pass
+    ``compare_fresh=False`` inside tight search loops where the warm
+    mask is expected to stay near-optimal.  ``mode="peak"`` finishes
+    with :func:`refine_slices_for_peak` against ``budget_bytes``."""
+    open_m = tree.tn.open_mask
+    S = warm & ~open_m
+    if tree.sliced_width(S) > target_dim:
+        S = ensure_width(tree, S, target_dim)
+    while True:
+        removable = [
+            b
+            for b in bits(S)
+            if tree.sliced_width(S & ~(1 << b)) <= target_dim
+        ]
+        if not removable:
+            break
+        b = min(
+            removable, key=lambda b_: (tree.sliced_cost(S & ~(1 << b_)), b_)
+        )
+        S &= ~(1 << b)
+    if compare_fresh:
+        fresh = ensure_width(tree, slice_finder(tree, target_dim), target_dim)
+        if tree.sliced_cost(fresh) < tree.sliced_cost(S):
+            S = fresh
+    if mode == "peak":
+        S = refine_slices_for_peak(
+            tree, S, target_dim, itemsize=itemsize, budget_bytes=budget_bytes
+        )
+    elif mode != "width":
+        raise ValueError(f"unknown slicing mode {mode!r}")
     return S
 
 

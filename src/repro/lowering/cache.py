@@ -187,7 +187,54 @@ class HoistCache(PlanCache):
     plan's partition); the stored value is ``(outputs, keepalive)`` —
     the hoisted device arrays in ``partition.hoisted_nodes`` order plus
     the key's keep-alive references, which must live exactly as long as
-    the entry so identity keys can never alias recycled buffers."""
+    the entry so identity keys can never alias recycled buffers.
+
+    Entries hold keep-alive references to *device buffers*, so eviction
+    is what releases device memory: dropping the ``(outputs, keepalive)``
+    tuple drops the only cache-held references (verified against
+    ``jax.live_arrays`` in tests).  Beyond the entry-count ``maxsize``,
+    an optional ``max_bytes`` bounds the summed ``outputs`` bytes —
+    oldest entries are evicted until the total fits (the newest entry is
+    always kept, even when it alone exceeds the bound: a best-effort LRU
+    bound, not an admission policy)."""
+
+    def __init__(self, maxsize: int = 8, max_bytes: int | None = None):
+        super().__init__(maxsize=maxsize)
+        self.max_bytes = max_bytes
+        self._entry_bytes: OrderedDict[str, int] = OrderedDict()
+        self.total_bytes = 0
+
+    @staticmethod
+    def entry_nbytes(value) -> int:
+        outputs, _keepalive = value
+        return sum(int(getattr(a, "nbytes", 0)) for a in outputs)
+
+    def put(self, key: str, value) -> None:
+        nbytes = self.entry_nbytes(value)
+        with self._lock:
+            old = self._entry_bytes.pop(key, 0)
+            self.total_bytes -= old
+            self._entries[key] = value
+            self._entries.move_to_end(key)
+            self._entry_bytes[key] = nbytes
+            self.total_bytes += nbytes
+            while len(self._entries) > 1 and (
+                len(self._entries) > self.maxsize
+                or (
+                    self.max_bytes is not None
+                    and self.total_bytes > self.max_bytes
+                )
+            ):
+                evicted, _ = self._entries.popitem(last=False)
+                self.total_bytes -= self._entry_bytes.pop(evicted)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._entry_bytes.clear()
+            self.total_bytes = 0
+            self.hits = 0
+            self.misses = 0
 
 
 #: process-global cache used by :mod:`repro.core.api`

@@ -306,6 +306,66 @@ def plan_memory(
     )
 
 
+def certified_peak(
+    tree: ContractionTree,
+    smask: int = 0,
+    itemsize: int = 8,
+    part=None,
+) -> int:
+    """The certified live-set peak for ``(tree, S)``: the worst case over
+    the naive full-tree subtask and the hoisted prologue/epilogue pair —
+    i.e. ``max(MemoryPlan.peak_bytes, MemoryPlan.peak_bytes_hoisted)`` —
+    computed *without* slot assignment or free schedules.
+
+    This is the byte-budget objective of the peak-aware slicer and the
+    anytime co-optimizer (:mod:`repro.optimize`), which call it once per
+    candidate inside their search loops; skipping the allocator sweep
+    keeps that evaluation cheap while matching :func:`plan_memory`'s
+    peaks exactly (property-tested).  ``part`` reuses a caller-held
+    partition for the same ``(tree, smask)``."""
+    order = tree.contract_order()
+    steps = [(*tree.children[v], v) for v in order]
+    nbytes = {v: node_nbytes(tree, v, smask, itemsize) for v in tree.emask}
+
+    def seg_peak(entry, seg_steps, outputs, pinned=()):
+        birth, death = step_lifetimes(list(seg_steps), entry, outputs)
+        pinned_set = set(pinned)
+        cur = sum(nbytes[v] for v in entry)
+        peak = cur
+        for t, (lhs, rhs, out) in enumerate(seg_steps):
+            cur += nbytes[out]
+            if cur > peak:
+                peak = cur
+            for u in (lhs, rhs):
+                if death.get(u) == t and u not in pinned_set:
+                    cur -= nbytes[u]
+        return peak
+
+    root = (tree.root,)
+    peak = seg_peak(tuple(range(tree.tn.num_tensors)), steps, root)
+    if not smask or not steps:
+        return peak
+    if part is None:
+        part = partition_tree(tree, smask)
+    pro_steps = [(*tree.children[v], v) for v in part.invariant_nodes]
+    if pro_steps:
+        peak = max(
+            peak,
+            seg_peak(part.prologue_leaves, pro_steps, part.hoisted_nodes),
+        )
+    epi_steps = [(*tree.children[v], v) for v in part.epilogue_nodes]
+    peak = max(
+        peak,
+        seg_peak(
+            part.epilogue_leaves + part.hoisted_nodes,
+            epi_steps,
+            root,
+            pinned=part.hoisted_nodes,
+        ),
+    )
+    return peak
+
+
 def peak_bytes(
     tree: ContractionTree,
     smask: int,

@@ -337,3 +337,39 @@ def refine_tree_schedule(
         steps, tree.tn.size_of, dtype=dtype,
         min_kernel_dim=min_kernel_dim, fused=fused,
     )
+
+
+def modeled_plan_time(
+    tree,
+    smask: int = 0,
+    dtype=jnp.complex64,
+    *,
+    part=None,
+    fused: bool | None = None,
+) -> float:
+    """Modeled wall seconds of *two-phase* execution for ``(tree, S)``:
+    the refined prologue runs once, the refined epilogue ``2^|S|`` times.
+
+    Objective evaluation without full plan compilation — no
+    ``ContractionPlan`` (and no jit trace) is built, so the anytime
+    co-optimizer can score candidates with ``objective="modeled_time"``
+    directly from planner state.  ``part`` reuses a caller-held
+    :class:`~repro.lowering.partition.TreePartition`."""
+    from ..core.tensor_network import popcount  # lazy: avoid cycle
+
+    sched = refine_tree_schedule(tree, smask, dtype=dtype, fused=fused)
+    if not smask:
+        return sched.modeled_time_s
+    if part is None:
+        from .partition import partition_tree  # lazy: avoid cycle
+
+        part = partition_tree(tree, smask)
+    invariant = set(part.invariant_nodes)
+    order = tree.contract_order()
+    prologue_t = sum(
+        spec.modeled_time_s
+        for v, spec in zip(order, sched.specs)
+        if v in invariant
+    )
+    n_slices = 1 << popcount(smask)
+    return prologue_t + (sched.modeled_time_s - prologue_t) * n_slices

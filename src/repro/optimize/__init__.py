@@ -1,0 +1,25 @@
+"""Anytime path–slice–memory co-optimization (Sec. IV run *inside* the
+path search).
+
+The staged pipeline (pathfinder → slicer → refiner) plans each stage
+once; :func:`plan_search` instead runs the paper's in-place slicer and
+the lifetime machinery **inside** an iterated tree search, scoring every
+``(tree, S)`` candidate by hoist-aware executed FLOPs under a certified
+live-set peak budget.  See :mod:`repro.optimize.search`.
+"""
+
+from .search import (
+    OneShot,
+    SearchResult,
+    TracePoint,
+    oneshot_plan,
+    plan_search,
+)
+
+__all__ = [
+    "OneShot",
+    "SearchResult",
+    "TracePoint",
+    "oneshot_plan",
+    "plan_search",
+]

@@ -122,6 +122,23 @@ def test_peak_matches_bruteforce_property(n, seed):
     _check_plan_against_bruteforce(tree, _random_smask(tree, rng))
 
 
+@given(n=st.integers(6, 20), seed=st.integers(0, 10_000))
+@settings(max_examples=25)
+def test_certified_peak_matches_full_plan(n, seed):
+    """The allocator-free fast path the slicer/co-optimizer score with
+    agrees exactly with the full MemoryPlan's certified peak."""
+    from repro.lowering.memory import certified_peak
+
+    tn = random_closed_network(n, 3, seed)
+    tree = random_tree(tn, seed=seed)
+    rng = np.random.default_rng(seed)
+    for smask in (0, _random_smask(tree, rng)):
+        mem = plan_memory(tree, smask, itemsize=8)
+        assert certified_peak(tree, smask, 8) == max(
+            mem.peak_bytes, mem.peak_bytes_hoisted
+        )
+
+
 def test_slot_assignment_valid():
     """Buffers sharing a slot have disjoint closed lifetimes, every
     buffer fits its slot, and the slot total bounds the true peak."""

@@ -1,0 +1,167 @@
+"""Anytime path–slice co-optimizer (repro.optimize.plan_search):
+determinism, the anytime-monotone contract, budget enforcement, and
+execution equivalence with the one-shot pipeline."""
+
+import math
+
+import numpy as np
+import pytest
+
+from conftest import random_closed_network
+from repro.core import ContractionPlan, simplify_network
+from repro.core.api import plan_contraction, simulate_amplitude
+from repro.core.tensor_network import popcount
+from repro.lowering.memory import certified_peak
+from repro.optimize import oneshot_plan, plan_search
+from repro.quantum.circuits import circuit_to_network, random_1d_circuit
+
+TARGET = 8
+
+
+def _tn(n=30, seed=2):
+    return random_closed_network(n, 3, seed)
+
+
+# ----------------------------------------------------------------------
+# determinism + anytime contract
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_seeded_determinism(workers):
+    tn = _tn()
+    a = plan_search(tn, TARGET, max_evals=24, num_workers=workers, seed=3)
+    b = plan_search(tn, TARGET, max_evals=24, num_workers=workers, seed=3)
+    assert a.smask == b.smask
+    assert a.objective == b.objective
+    assert a.evaluations == b.evaluations
+    assert [t.objective for t in a.trace] == [t.objective for t in b.trace]
+    assert a.tree.total_cost() == b.tree.total_cost()
+    assert sorted(a.tree.emask.items()) == sorted(b.tree.emask.items())
+
+
+def test_anytime_monotone_trace():
+    tn = _tn(34, 7)
+    res = plan_search(tn, TARGET, max_evals=48, num_workers=4, seed=1)
+    objs = [t.objective for t in res.trace]
+    assert objs, "search must record at least the seed"
+    assert objs == sorted(objs, reverse=True)
+    assert len(set(objs)) == len(objs), "best-so-far must strictly improve"
+    assert res.objective == objs[-1]
+    # a longer run of the same seeded search never ends worse
+    longer = plan_search(tn, TARGET, max_evals=96, num_workers=4, seed=1)
+    assert longer.objective <= res.objective
+
+
+def test_budgets_respected():
+    tn = _tn(28, 5)
+    res = plan_search(tn, TARGET, max_evals=17, num_workers=3, seed=0)
+    assert res.evaluations <= 17
+    assert res.feasible
+    assert res.peak_bytes <= res.budget_bytes
+    # the returned pair re-certifies against the returned budget
+    assert certified_peak(res.tree, res.smask, 8) <= res.budget_bytes
+    res.tree.check_valid()
+    # an explicit (tight) budget is enforced on the result too
+    tight = plan_search(
+        tn, TARGET, max_evals=17, num_workers=3, seed=0,
+        budget_bytes=res.budget_bytes,
+    )
+    assert tight.peak_bytes <= res.budget_bytes
+
+
+def test_matches_or_beats_oneshot_at_equal_budget():
+    """The acceptance claim: seeded with the one-shot pipeline, the
+    co-optimizer never returns a worse hoist-aware executed-FLOPs
+    objective under the same certified-peak budget."""
+    for seed in range(4):
+        tn = _tn(30, seed)
+        res = plan_search(tn, TARGET, max_evals=32, num_workers=4, seed=seed)
+        assert res.baseline_objective is not None
+        assert res.objective <= res.baseline_objective * (1 + 1e-12)
+        assert res.improvement >= 1.0
+
+
+# ----------------------------------------------------------------------
+# execution equivalence
+# ----------------------------------------------------------------------
+def test_evals_1_returns_oneshot_exactly_bitwise():
+    """With a single evaluation the search returns the one-shot seed
+    unchanged, so the two plans contract bitwise-equal amplitudes."""
+    c = random_1d_circuit(9, 6, seed=5)
+    tn, arrays = circuit_to_network(c, bitstring="011010010")
+    tn, arrays = simplify_network(tn, arrays)
+    res = plan_search(tn, 6, max_evals=1, num_workers=1, seed=0,
+                      slicing_mode="width")
+    shot = oneshot_plan(tn, 6, seed=0, slicing_mode="width")
+    assert res.smask == shot.smask
+    assert sorted(res.tree.children.items()) == sorted(
+        shot.tree.children.items()
+    )
+    v_search = np.asarray(
+        ContractionPlan(res.tree, res.smask).contract_all(arrays)
+    )
+    v_shot = np.asarray(
+        ContractionPlan(shot.tree, shot.smask).contract_all(arrays)
+    )
+    np.testing.assert_array_equal(v_search, v_shot)
+
+
+def test_searched_plan_contracts_correct_amplitude():
+    c = random_1d_circuit(9, 6, seed=5)
+    tn, arrays = circuit_to_network(c, bitstring="011010010")
+    tn, arrays = simplify_network(tn, arrays)
+    res = plan_search(tn, 5, max_evals=24, num_workers=2, seed=4)
+    res.tree.check_valid()
+    val = np.asarray(
+        ContractionPlan(res.tree, res.smask).contract_all(arrays)
+    )
+    shot = oneshot_plan(tn, 5, seed=4)
+    ref = np.asarray(ContractionPlan(shot.tree, 0).contract_all(arrays))
+    np.testing.assert_allclose(val, ref, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# API integration (the CI smoke entry point: both backends via
+# REPRO_BACKEND, tiny evaluation budget)
+# ----------------------------------------------------------------------
+def test_plan_search_smoke():
+    c = random_1d_circuit(8, 6, seed=7)
+    bits = "0" * 8
+    one = simulate_amplitude(c, bits, target_dim=6, use_cache=False)
+    res = simulate_amplitude(
+        c, bits, target_dim=6, use_cache=False,
+        optimize="anytime", search_evals=8, search_workers=2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(res.value), np.asarray(one.value), atol=1e-5
+    )
+    assert res.report.optimize == "anytime"
+    assert 0 < res.report.search_evals <= 8
+    assert res.report.search_trace
+    first = res.report.search_trace[0]
+    assert {"evaluation", "objective", "num_sliced", "peak_bytes"} <= set(
+        first
+    )
+
+
+def test_plan_contraction_anytime_report():
+    tn = _tn(24, 9)
+    tree, smask, report = plan_contraction(
+        tn, TARGET, optimize="anytime", search_evals=12, search_workers=2
+    )
+    assert report.optimize == "anytime"
+    assert report.search_evals <= 12
+    assert tree.sliced_width(smask) <= TARGET or popcount(smask) == 0
+    assert "opt=anytime" in report.row()
+    with pytest.raises(ValueError):
+        plan_contraction(tn, TARGET, optimize="nope")
+
+
+def test_objective_modeled_time():
+    tn = _tn(26, 11)
+    res = plan_search(
+        tn, TARGET, max_evals=6, num_workers=2, seed=0,
+        objective="modeled_time",
+    )
+    assert res.objective > 0.0
+    assert math.isfinite(res.objective)
+    assert res.objective_kind == "modeled_time"
