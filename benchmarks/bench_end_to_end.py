@@ -1,6 +1,9 @@
 """Sec. VI-B — end-to-end contraction: paper-faithful pipeline vs greedy
 baseline, measured on the real executor (CPU), plus the projected
-single-chip TPU time from the F-surface model for the planner's output.
+single-chip TPU time from the F-surface model for the planner's output,
+and the epilogue-megakernel ablation (REPRO_MEGAKERNEL on/off on the
+lowered GEMM schedule: fused-chain counts, modeled HBM bytes saved, and
+the measured contract_all wall both ways).
 
 The paper's headline (304 s → 149.2 s on 107,520 Sunway nodes) is a
 planner+efficiency product; at our scale we report the same decomposition:
@@ -9,13 +12,15 @@ planner+efficiency product; at our scale we report the same decomposition:
 
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.core import plan_contraction
 from repro.core.executor import ContractionPlan
 from repro.core.merging import modeled_tree_time
 
-from .common import network_for, timer
+from .common import append_trajectory, network_for, timer
 
 
 def run(circuit: str = "syc-12") -> list[str]:
@@ -59,7 +64,72 @@ def run(circuit: str = "syc-12") -> list[str]:
     assert abs(results["greedy_base"] - results["paper_faithful"]) < 1e-4, (
         "pipelines disagree on the amplitude!"
     )
+    rows.extend(megakernel_rows(circuit, plans["paper_faithful"], arrays))
     return rows
+
+
+def megakernel_rows(
+    circuit: str,
+    plan_tuple,
+    arrays,
+    trajectory_dir: str = "experiments/megakernel",
+) -> list[str]:
+    """Epilogue-megakernel ablation on the paper-faithful plan: the same
+    lowered GEMM schedule executed with the fusion-boundary pass off and
+    on (REPRO_MEGAKERNEL={0,1}), values asserted equal, chain statistics
+    from the ChainPlan, and the measured contract_all wall both ways —
+    appended to the trajectory history ``make_tables`` renders."""
+    tree, smask, report = plan_tuple
+    saved = os.environ.get("REPRO_MEGAKERNEL")
+    walls, vals = {}, {}
+    chain_summary = None
+    hbm_saved = {}
+    try:
+        for mega in ("0", "1"):
+            os.environ["REPRO_MEGAKERNEL"] = mega
+            plan = ContractionPlan(tree, smask, backend="gemm")
+            val, t = timer(
+                lambda: np.asarray(plan.contract_all(arrays, slice_batch=4)),
+                repeat=2,
+            )
+            walls[mega], vals[mega] = t, complex(val)
+            if mega == "1":
+                assert plan.chain_plan is not None, "fusion pass did not run"
+                chain_summary = plan.chain_plan.summary()
+                hbm_saved = chain_summary["hbm_bytes_saved"]
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_MEGAKERNEL", None)
+        else:
+            os.environ["REPRO_MEGAKERNEL"] = saved
+    assert abs(vals["0"] - vals["1"]) < 1e-4, (
+        "megakernel on/off disagree on the amplitude!"
+    )
+    record = {
+        "workload": circuit,
+        "num_sliced": report.num_sliced,
+        "fused_chains": chain_summary["multi_step_chains"],
+        "max_chain_len": chain_summary["max_chain_len"],
+        "chain_peak_bytes": chain_summary["max_live_bytes"],
+        "vmem_budget": chain_summary["vmem_budget"],
+        "hbm_bytes_saved": hbm_saved,
+        "wall_megakernel_off_s": walls["0"],
+        "wall_megakernel_on_s": walls["1"],
+        "speedup": walls["0"] / walls["1"] if walls["1"] else None,
+    }
+    append_trajectory([record], trajectory_dir)
+    return [
+        f"e2e_megakernel_off_ms,{walls['0']*1e3:.1f},"
+        f"chains=0;chain_saved=0",
+        f"e2e_megakernel_on_ms,{walls['1']*1e3:.1f},"
+        f"chains={chain_summary['multi_step_chains']};"
+        f"max_len={chain_summary['max_chain_len']};"
+        f"chain_peak={chain_summary['max_live_bytes']};"
+        + "chain_saved="
+        + ";".join(
+            f"{seg}:{int(v)}" for seg, v in sorted(hbm_saved.items())
+        ),
+    ]
 
 
 def tree_width(tn) -> int:

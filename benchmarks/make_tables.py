@@ -7,10 +7,12 @@ experiments/lowering/, the §Hoisting table (naive vs two-phase
 sliced execution) from the records ``benchmarks.bench_slicing_overhead``
 appends under experiments/hoisting/, the §Memory table (peak-aware
 slicer vs width proxy + fused transpose credit) from the records the
-same benchmark's ``memory_rows`` appends under experiments/memory/, and
-the §Co-optimizer table (one-shot pipeline vs anytime plan_search) from
-the records ``benchmarks.bench_slice_count.cooptimizer_rows`` appends
-under experiments/optimize/.
+same benchmark's ``memory_rows`` appends under experiments/memory/, the §Co-optimizer table (one-shot
+pipeline vs anytime plan_search) from the records
+``benchmarks.bench_slice_count.cooptimizer_rows`` appends under
+experiments/optimize/, and the §Megakernel table (epilogue fused-chain
+ablation) from the records ``benchmarks.bench_end_to_end`` appends
+under experiments/megakernel/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -249,6 +251,45 @@ def print_optimize_table(optimize_dir="experiments/optimize") -> None:
         )
 
 
+def print_megakernel_table(megakernel_dir="experiments/megakernel") -> None:
+    """§Megakernel rows: the epilogue fused-chain ablation
+    (REPRO_MEGAKERNEL on/off on the lowered GEMM schedule), one row per
+    trajectory record."""
+    paths = sorted(glob.glob(os.path.join(megakernel_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows.extend(rec.get("records", []))
+    if not rows:
+        return
+    print("\n### Epilogue megakernel "
+          "(VMEM-resident fused GEMM chains, REPRO_MEGAKERNEL ablation)\n")
+    print("| workload | slices | fused chains | max len | chain peak | "
+          "HBM saved/exec (per segment) | wall off → on | speedup |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "fused_chains" not in r:
+            continue
+        saved = ", ".join(
+            f"{seg}:{fmt_bytes(v)}"
+            for seg, v in sorted(r.get("hbm_bytes_saved", {}).items())
+        ) or "-"
+        speed = r.get("speedup")
+        print(
+            f"| {r.get('workload', '-')} "
+            f"| {1 << r.get('num_sliced', 0)} "
+            f"| {r['fused_chains']} "
+            f"| {r.get('max_chain_len', '-')} "
+            f"| {fmt_bytes(r.get('chain_peak_bytes'))} "
+            f"| {saved} "
+            f"| {fmt_s(r.get('wall_megakernel_off_s'))} → "
+            f"{fmt_s(r.get('wall_megakernel_on_s'))} "
+            f"| {'-' if speed is None else f'{speed:.2f}×'} |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -303,6 +344,7 @@ def main() -> None:
     print_hoisting_table()
     print_memory_table()
     print_optimize_table()
+    print_megakernel_table()
 
 
 if __name__ == "__main__":

@@ -74,6 +74,9 @@ class PlanReport:
     optimize: str = "oneshot"  # planner mode: oneshot | anytime
     search_evals: int = 0  # candidate evaluations the search spent
     search_trace: list | None = None  # best-so-far improvements (dicts)
+    # epilogue megakernel metrics (PR 6)
+    fused_chains: int = 0  # multi-step VMEM-resident chains planned
+    chain_hbm_bytes_saved: float = 0.0  # modeled HBM bytes chains avoid/slice
 
     def row(self) -> str:
         row = (
@@ -105,6 +108,11 @@ class PlanReport:
             row += f" lowered[{nodes}] pad_waste={self.pad_waste*100:.1f}%"
             if self.transpose_bytes_saved:
                 row += f" tb_saved={_fmt_bytes(self.transpose_bytes_saved)}"
+        if self.fused_chains:
+            row += (
+                f" chains={self.fused_chains}"
+                f" chain_saved={_fmt_bytes(self.chain_hbm_bytes_saved)}"
+            )
         return row
 
 
@@ -260,12 +268,12 @@ def plan_compiled(
     when ``search_wall_s=None``.
     """
     from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
-    from ..lowering.refiner import default_fused
+    from ..lowering.refiner import default_fused, default_megakernel
 
     import jax.numpy as jnp
 
     backend = backend if backend is not None else default_backend()
-    dtype = jnp.dtype(dtype) if dtype is not None else jnp.complex64
+    dtype = jnp.dtype(dtype if dtype is not None else jnp.complex64)
     t0 = time.perf_counter()
     key = None
     if use_cache:
@@ -279,12 +287,14 @@ def plan_compiled(
             if optimize == "anytime"
             else ()
         )
+        # REPRO_MEGAKERNEL changes the plan's chain dispatch the same way
+        # REPRO_FUSED_GEMM changes its schedule — both join the key
         key = network_fingerprint(
             tn,
             dtype,
             extra=(backend, target_dim, method, tune, merge, repeats, seed,
-                   slicing_mode, default_fused(), optimize, budget_bytes,
-                   search_key),
+                   slicing_mode, default_fused(), default_megakernel(),
+                   optimize, budget_bytes, search_key),
         )
         ent = PLAN_CACHE.get(key)
         if ent is not None:
@@ -342,6 +352,33 @@ def plan_compiled(
         report.pad_waste = plan.schedule.pad_waste()
         report.transpose_bytes_saved = (
             plan.schedule.transpose_bytes_eliminated()
+        )
+    if plan.chain_plan is not None:
+        report.fused_chains = plan.chain_plan.num_multi
+        # per-slice saving in the mode that will execute: under hoisting
+        # the epilogue is what runs once per slice
+        seg = (
+            "epilogue"
+            if report.hoist and plan.can_hoist and plan.num_sliced
+            else "naive"
+        )
+        report.chain_hbm_bytes_saved = plan.chain_plan.hbm_bytes_saved(seg)
+        # cost-model correction: a chained step no longer pays the HBM
+        # round-trip of its interior output nor the unfused backends'
+        # transpose-copy traffic (kept disjoint in FusedChainSpec, so
+        # nothing is double-charged) — feed the per-segment savings back
+        # into the modeled times the planner reports
+        cp = plan.chain_plan
+        report.modeled_time_s = max(
+            0.0,
+            report.modeled_time_s
+            - cp.modeled_time_saved_s("naive") * (1 << plan.num_sliced),
+        )
+        report.modeled_time_hoisted_s = max(
+            0.0,
+            report.modeled_time_hoisted_s
+            - cp.modeled_time_saved_s("prologue")
+            - cp.modeled_time_saved_s("epilogue") * (1 << plan.num_sliced),
         )
     report.plan_wall_s = time.perf_counter() - t0
     if use_cache:

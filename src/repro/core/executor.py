@@ -277,6 +277,40 @@ class ContractionPlan:
             self.hoisted_nodes = part.hoisted_nodes
             self.prologue_leaves = part.prologue_leaves
             self.epilogue_leaves = part.epilogue_leaves
+        # lifetime-based buffer plan (lazy; built eagerly below when the
+        # fusion-boundary pass needs the per-node buffer sizes)
+        self._memory_plan = None
+        # fusion-boundary pass (epilogue megakernel): runs of adjacent
+        # schedule steps whose certified live set fits VMEM execute as
+        # single fused-chain calls.  Planned per execution segment so a
+        # chain can never cross the prologue/epilogue boundary; the
+        # REPRO_MEGAKERNEL switch is read here (plan construction) and
+        # joins the plan-cache fingerprint in the API layer.
+        self.chain_plan = None
+        self._chain_dispatch: dict[str, dict] = {}
+        if self.schedule is not None and self.steps:
+            from ..lowering.refiner import (  # lazy: avoid cycle
+                default_megakernel,
+                plan_chains,
+            )
+
+            if default_megakernel():
+                mem = self.memory_plan()
+                segments = {"naive": tuple(range(len(self.steps)))}
+                if self.partition is not None:
+                    if self.prologue_idx:
+                        segments["prologue"] = self.prologue_idx
+                    segments["epilogue"] = self.epilogue_idx
+                step_nodes = tuple(
+                    (s.lhs, s.rhs, s.out) for s in self.steps
+                )
+                self.chain_plan = plan_chains(
+                    self.schedule, step_nodes, segments, mem.naive.nbytes
+                )
+                self._chain_dispatch = {
+                    name: self.chain_plan.by_segment(name)
+                    for name in segments
+                }
         # memoized jitted executables (plan-lifetime — a cached plan
         # served twice skips retracing, not just re-planning)
         self._compiled: dict = {}
@@ -290,10 +324,6 @@ class ContractionPlan:
             maxsize=int(os.environ.get("REPRO_HOIST_CACHE_SIZE", "8")),
             max_bytes=int(hoist_bytes) if hoist_bytes else None,
         )
-        # lifetime-based buffer plan (lazy: the slicer may have built one
-        # already at planning time, but the executor's copy uses the
-        # plan's own dtype itemsize)
-        self._memory_plan = None
 
     # ------------------------------------------------------------------
     @property
@@ -360,7 +390,8 @@ class ContractionPlan:
             from ..lowering.memory import plan_memory  # lazy: avoid cycle
 
             self._memory_plan = plan_memory(
-                self.tree, self.smask, itemsize=self.dtype.itemsize
+                self.tree, self.smask, itemsize=self.dtype.itemsize,
+                part=self.partition,
             )
         return self._memory_plan
 
@@ -380,10 +411,50 @@ class ContractionPlan:
         free schedule for ``segment`` — deterministic last-use drops (in
         the epilogue this keeps the pinned hoisted buffers out of the
         free lists; they are cross-slice captures whose storage is never
-        reclaimable inside one subtask)."""
+        reclaimable inside one subtask).
+
+        Positions planned into a fused chain (``self.chain_plan``,
+        keyed by the chain's first position) dispatch as one
+        ``gemm_form.apply_chain`` call — this single site covers the
+        vmapped scan, ``contract_sharded``, and ``contract_resumable``,
+        which all funnel through here."""
         seg = self.memory_plan().segment_for(segment)
         frees = seg.frees if seg is not None else None
-        for k in step_ids:
+        chains = self._chain_dispatch.get(segment, {})
+        ids = list(step_ids)
+        i = 0
+        while i < len(ids):
+            k = ids[i]
+            ch = chains.get(k)
+            if ch is not None:
+                # fused chain: one megakernel call covers the whole run;
+                # interior intermediates never enter env (they live in
+                # the kernel's VMEM scratch slots), so the planned frees
+                # for them are no-ops and everything else drops exactly
+                # where the lifetime plan says it dies.
+                from ..lowering import gemm_form  # lazy: avoid cycle
+
+                assert tuple(ids[i:i + ch.n_steps]) == ch.positions, (
+                    segment, ch.positions, ids[i:i + ch.n_steps]
+                )
+                env[ch.out_node] = gemm_form.apply_chain(
+                    ch,
+                    [self.schedule.specs[p] for p in ch.positions],
+                    [env[n] for n in ch.external_nodes],
+                )
+                interior = {n[2] for n in ch.nodes[:-1]}
+                for p in ch.positions:
+                    out = self.steps[p].out
+                    dead = (
+                        frees[out]
+                        if frees is not None
+                        else (self.steps[p].lhs, self.steps[p].rhs)
+                    )
+                    for u in dead:
+                        if u in env and u not in interior:
+                            del env[u]
+                i += ch.n_steps
+                continue
             st = self.steps[k]
             if self.schedule is None:
                 env[st.out] = jnp.einsum(st.expr, env[st.lhs], env[st.rhs])
@@ -400,6 +471,7 @@ class ContractionPlan:
             )
             for u in dead:
                 del env[u]
+            i += 1
 
     def contract_slice(
         self, arrays: Sequence[jnp.ndarray], slice_id, hoisted=None

@@ -13,10 +13,18 @@ into submodules.
 
 from . import ops, ref  # noqa: F401
 from .contract_gemm import (  # noqa: F401
+    chain_reference,
+    fused_chain_matmul,
     fused_transpose_matmul,
     suffix_tile_split,
     tiled_matmul,
 )
 from .flash_attention import flash_attention  # noqa: F401
 from .mamba2_ssd import ssd_intra_chunk  # noqa: F401
-from .ops import attention, fused_matmul, matmul, ssd_scan  # noqa: F401
+from .ops import (  # noqa: F401
+    attention,
+    fused_chain,
+    fused_matmul,
+    matmul,
+    ssd_scan,
+)

@@ -26,6 +26,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, *, k_tiles: int):
@@ -271,3 +272,205 @@ def fused_transpose_matmul(
         out_shape=jax.ShapeDtypeStruct(out_shape, jnp.float32),
         interpret=interpret,
     )(a, b)
+
+
+# ----------------------------------------------------------------------
+# epilogue megakernel: a *run* of adjacent tree GEMMs executes as one
+# persistent kernel — chain intermediates live in VMEM scratch slots
+# assigned by the lifetime planner's linear scan, never touching HBM
+# ----------------------------------------------------------------------
+def _chain_step_math(a, b, form, *, unroll_batch: bool):
+    """One chained step on VMEM-resident values, in tree-native
+    transpose-GEMM form.
+
+    ``a``/``b`` are either fp32 arrays (real chain) or ``(re, im)`` fp32
+    pairs (complex chain — the carry stays split through the whole chain;
+    per-step Karatsuba, 3 real GEMMs).  ``unroll_batch=True`` issues one
+    2-D MXU dot per batch cell — the exact dots (and accumulation order)
+    :func:`fused_transpose_matmul` executes per grid cell, which is what
+    makes the megakernel bitwise-reproducible against the unfused chain;
+    ``False`` uses one batched ``dot_general`` (the off-TPU reference
+    dataflow).  Returns the step output permuted to the executor's
+    ``inds_out`` order — the native layout of the next step's operand."""
+
+    def gemm(x, y):
+        xa = jnp.transpose(x, form.perm_a).reshape(form.B, form.M, form.K)
+        yb = jnp.transpose(y, form.perm_b).reshape(form.B, form.K, form.N)
+        if unroll_batch or form.B == 1:
+            out = jnp.stack(
+                [
+                    jnp.dot(
+                        xa[i], yb[i], preferred_element_type=jnp.float32
+                    )
+                    for i in range(form.B)
+                ]
+            )
+        else:
+            out = jax.lax.dot_general(
+                xa,
+                yb,
+                (((2,), (1,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32,
+            )
+        out = out.reshape(form.batch_shape + form.m_shape + form.n_shape)
+        if form.out_perm != tuple(range(out.ndim)):
+            out = jnp.transpose(out, form.out_perm)
+        return out
+
+    if isinstance(a, tuple):
+        (ar, ai), (br, bi) = a, b
+        p1 = gemm(ar, br)
+        p2 = gemm(ai, bi)
+        p3 = gemm(ar + ai, br + bi)
+        return (p1 - p2, p3 - p1 - p2)
+    return gemm(a, b)
+
+
+def _run_chain(read_ext, forms, carry_side, *, ncomp, unroll_batch,
+               store_carry=None):
+    """Shared chain dataflow: the kernel body and the off-TPU reference
+    both walk this exact sequence, so they agree step for step.
+    ``store_carry(t, comps)`` routes an interior carry through its VMEM
+    scratch slot (kernel) or passes it through (reference)."""
+    carry = None
+    for t, form in enumerate(forms):
+        if t == 0:
+            a, b = read_ext(), read_ext()
+        else:
+            ext = read_ext()
+            a, b = (carry, ext) if carry_side[t] == "l" else (ext, carry)
+        val = _chain_step_math(a, b, form, unroll_batch=unroll_batch)
+        comps = val if ncomp == 2 else (val,)
+        if t + 1 < len(forms) and store_carry is not None:
+            comps = store_carry(t, comps)
+        carry = comps if ncomp == 2 else comps[0]
+    return carry if ncomp == 2 else (carry,)
+
+
+def _chain_kernel(*refs, forms, carry_side, slot_ids, ncomp, n_ext):
+    ext_refs = refs[:n_ext * ncomp]
+    out_refs = refs[n_ext * ncomp:n_ext * ncomp + ncomp]
+    scratch = refs[n_ext * ncomp + ncomp:]
+    cursor = [0]
+
+    def read_ext():
+        i = cursor[0]
+        cursor[0] += 1
+        vals = tuple(ext_refs[i * ncomp + c][...] for c in range(ncomp))
+        return vals if ncomp == 2 else vals[0]
+
+    def store_carry(t, comps):
+        # flat store into the planner-assigned slot, then read back in
+        # the carry's shape: the intermediate lives only in this VMEM
+        # scratch buffer — the HBM round-trip of the unfused path never
+        # happens.  Slot reuse across steps (ping-pong) is exactly the
+        # linear-scan assignment certified at plan time.
+        sid = slot_ids[t]
+        stored = []
+        for c, v in enumerate(comps):
+            ref = scratch[sid * ncomp + c]
+            flat = v.reshape(-1)
+            ref[0:flat.size] = flat
+            stored.append(ref[0:flat.size].reshape(v.shape))
+        return tuple(stored)
+
+    outs = _run_chain(
+        read_ext, forms, carry_side, ncomp=ncomp, unroll_batch=True,
+        store_carry=store_carry,
+    )
+    for c in range(ncomp):
+        out_refs[c][...] = outs[c]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "forms", "carry_side", "slot_ids", "slot_elems", "complex_mode",
+        "interpret",
+    ),
+)
+def fused_chain_matmul(
+    *operands: jax.Array,
+    forms: tuple,
+    carry_side: tuple[str, ...],
+    slot_ids: tuple[int, ...],
+    slot_elems: tuple[int, ...],
+    complex_mode: bool = False,
+    interpret: bool = False,
+):
+    """Persistent megakernel for a run of adjacent tree GEMMs.
+
+    ``forms`` are the chain's :class:`~repro.lowering.gemm_form.GemmForm`
+    steps in execution order; step ``t``'s carry operand is the previous
+    step's output (``carry_side[t]`` says which side, ``""`` for step 0).
+    ``operands`` are the chain's *external* inputs — step 0's pair, then
+    one non-carry operand per later step — each in its tree-native
+    layout.  In ``complex_mode`` every logical operand is passed as two
+    fp32 components ``(re, im)`` and the kernel returns the pair; the
+    carry stays component-split end to end, with each step running the
+    3-real-GEMM Karatsuba.
+
+    The whole chain executes as one grid-less ``pallas_call``: operands
+    are DMA'd to VMEM once, every intermediate lives in a VMEM scratch
+    slot (``slot_ids[t]`` = slot of step ``t``'s output, ``slot_elems`` =
+    per-slot capacity in logical elements — both straight from the
+    lifetime planner's linear-scan assignment, see
+    :func:`repro.lowering.memory.chain_segment_plan`), and only the final
+    output is written back — zero HBM round-trips between chained steps.
+    Returns a tuple of ``ncomp`` fp32 arrays in the executor's
+    ``inds_out`` order of the last step.
+    """
+    ncomp = 2 if complex_mode else 1
+    n_ext = len(forms) + 1
+    assert len(operands) == n_ext * ncomp, (len(operands), n_ext, ncomp)
+    assert len(slot_ids) == len(forms) - 1, (slot_ids, len(forms))
+    f = forms[-1]
+    natural = f.batch_shape + f.m_shape + f.n_shape
+    oshape = tuple(natural[p] for p in f.out_perm)
+    out = pl.pallas_call(
+        functools.partial(
+            _chain_kernel,
+            forms=forms,
+            carry_side=carry_side,
+            slot_ids=slot_ids,
+            ncomp=ncomp,
+            n_ext=n_ext,
+        ),
+        out_shape=tuple(
+            jax.ShapeDtypeStruct(oshape, jnp.float32) for _ in range(ncomp)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((e,), jnp.float32)
+            for e in slot_elems
+            for _ in range(ncomp)
+        ],
+        interpret=interpret,
+    )(*operands)
+    return tuple(out)
+
+
+def chain_reference(
+    components,
+    *,
+    forms: tuple,
+    carry_side: tuple[str, ...],
+    complex_mode: bool = False,
+):
+    """The megakernel's dataflow in plain jnp — same externals, same
+    per-step Karatsuba on split fp32 components, same step order — used
+    off-TPU where interpret-mode Pallas would be pure-Python slow.  Batch
+    cells run as one batched ``dot_general`` (XLA fuses the whole chain
+    into one program); agreement with the kernel is to fp32 tolerance,
+    and exact when every step has ``B == 1``."""
+    ncomp = 2 if complex_mode else 1
+    cursor = [0]
+
+    def read_ext():
+        i = cursor[0]
+        cursor[0] += 1
+        vals = tuple(components[i * ncomp + c] for c in range(ncomp))
+        return vals if ncomp == 2 else vals[0]
+
+    return _run_chain(
+        read_ext, forms, carry_side, ncomp=ncomp, unroll_batch=False,
+    )

@@ -18,7 +18,12 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .contract_gemm import fused_transpose_matmul, tiled_matmul
+from .contract_gemm import (
+    chain_reference,
+    fused_chain_matmul,
+    fused_transpose_matmul,
+    tiled_matmul,
+)
 from .flash_attention import flash_attention
 from .mamba2_ssd import ssd_intra_chunk
 
@@ -138,6 +143,63 @@ def fused_matmul(
         a, b, perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
         bm=bm, bn=bn, bk=bk, interpret=interpret,
     )
+
+
+def fused_chain(
+    operands,
+    *,
+    forms: tuple,
+    carry_side: tuple[str, ...],
+    slot_ids: tuple[int, ...],
+    slot_elems: tuple[int, ...],
+    interpret: bool | None = None,
+    use_kernel: bool | None = None,
+):
+    """Execute a fused GEMM chain (see :class:`repro.lowering.refiner.
+    FusedChainSpec`): a run of adjacent tree contractions as one call,
+    intermediates VMEM-resident, with complex support.
+
+    Complex operands are split into fp32 ``(re, im)`` components *here*,
+    once, at the chain boundary — the carry stays component-split through
+    every step (per-step Karatsuba), so no complex intermediate is ever
+    materialized between chained steps.  On TPU the chain runs as the
+    persistent Pallas megakernel
+    (:func:`repro.kernels.contract_gemm.fused_chain_matmul`); off-TPU it
+    runs the same dataflow as one fused XLA program
+    (:func:`~repro.kernels.contract_gemm.chain_reference`) — interpret-
+    mode Pallas emulates kernels in Python per step, which would defeat
+    the fusion this path exists to measure.  ``use_kernel`` forces the
+    choice (the conformance suite exercises the kernel body explicitly
+    with ``use_kernel=True, interpret=True``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if use_kernel is None:
+        use_kernel = not interpret
+    complex_mode = any(jnp.iscomplexobj(o) for o in operands)
+    comps = []
+    for o in operands:
+        o = jnp.asarray(o)
+        if complex_mode:
+            comps.append(jnp.real(o).astype(jnp.float32))
+            comps.append(jnp.imag(o).astype(jnp.float32))
+        else:
+            comps.append(o.astype(jnp.float32))
+    kw = dict(
+        forms=tuple(forms), carry_side=tuple(carry_side),
+        complex_mode=complex_mode,
+    )
+    if use_kernel:
+        out = fused_chain_matmul(
+            *comps, slot_ids=tuple(slot_ids), slot_elems=tuple(slot_elems),
+            interpret=interpret, **kw,
+        )
+    else:
+        out = chain_reference(comps, **kw)
+    if complex_mode:
+        re, im = out
+        return re + 1j * im
+    return out[0]
 
 
 def attention(

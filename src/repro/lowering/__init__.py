@@ -43,21 +43,28 @@ from .cache import (  # noqa: F401
     leaf_key,
     network_fingerprint,
 )
-from .gemm_form import GemmForm, apply, lower_step  # noqa: F401
+from .gemm_form import GemmForm, apply, apply_chain, lower_step  # noqa: F401
 from .memory import (  # noqa: F401
     MemoryPlan,
     SegmentPlan,
+    chain_segment_plan,
     node_nbytes,
     peak_bytes,
     plan_memory,
 )
 from .partition import TreePartition, partition_tree  # noqa: F401
 from .refiner import (  # noqa: F401
+    CHAIN_VMEM_BUDGET_BYTES,
+    ChainPlan,
+    FusedChainSpec,
     GemmSpec,
     LoweredSchedule,
     default_fused,
+    default_megakernel,
     modeled_step_time,
     operand_transpose_bytes,
+    plan_chains,
+    plan_tree_chains,
     refine_schedule,
     refine_step,
     refine_tree_schedule,

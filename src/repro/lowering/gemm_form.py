@@ -214,3 +214,43 @@ def apply(spec, a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
     if form.out_perm != tuple(range(out.ndim)):
         out = jnp.transpose(out, form.out_perm)
     return out
+
+
+def apply_chain(
+    chain, specs, operands, *, interpret: bool | None = None,
+    use_kernel: bool | None = None,
+):
+    """Execute one fused chain (``chain`` is a refiner
+    :class:`~repro.lowering.refiner.FusedChainSpec`, ``specs`` the
+    GemmSpecs of its steps, ``operands`` the external buffers in
+    ``chain.external_nodes`` order) as a single megakernel call.
+
+    Trace-safe like :func:`apply` — the chain metadata is static — so the
+    same dispatch serves the vmapped slice scan, ``shard_map``, and the
+    resumable per-slice path.  64-bit components handed to a schedule
+    refined for a narrower dtype fall back to the sequential per-step
+    :func:`apply` (same trace-time guard as the single-step path: the
+    fp32 chain kernel would silently truncate them)."""
+    dt = jnp.result_type(*[o.dtype for o in operands])
+    if real_component_bytes(dt) > 4:
+        carry = apply(
+            specs[0], operands[0], operands[1], interpret=interpret
+        )
+        for t in range(1, len(specs)):
+            ext = operands[t + 1]
+            a, b = (
+                (carry, ext) if chain.carry_side[t] == "l" else (ext, carry)
+            )
+            carry = apply(specs[t], a, b, interpret=interpret)
+        return carry
+    from ..kernels import ops
+
+    return ops.fused_chain(
+        operands,
+        forms=tuple(s.form for s in specs),
+        carry_side=chain.carry_side,
+        slot_ids=chain.slot_ids,
+        slot_elems=chain.slot_elems,
+        interpret=interpret,
+        use_kernel=use_kernel,
+    )

@@ -86,6 +86,18 @@ def default_fused() -> bool:
     return v == "1"
 
 
+def default_megakernel() -> bool:
+    """Whether the executor may fuse adjacent GEMMs into VMEM-resident
+    chains (the epilogue megakernel): the ``REPRO_MEGAKERNEL``
+    environment variable (CI runs the tier-1 gate under both values),
+    defaulting to on.  ``REPRO_MEGAKERNEL=0`` is the off-switch back to
+    one kernel dispatch per tree step."""
+    v = os.environ.get("REPRO_MEGAKERNEL", "1")
+    if v not in ("0", "1"):
+        raise ValueError(f"REPRO_MEGAKERNEL={v!r} not in ('0', '1')")
+    return v == "1"
+
+
 def operand_transpose_bytes(form: GemmForm, dtype) -> float:
     """HBM traffic of materializing the operand permutations: one read +
     one write per operand whose native layout is not already in GEMM
@@ -336,6 +348,295 @@ def refine_tree_schedule(
     return refine_schedule(
         steps, tree.tn.size_of, dtype=dtype,
         min_kernel_dim=min_kernel_dim, fused=fused,
+    )
+
+
+# ----------------------------------------------------------------------
+# fusion-boundary pass: greedy VMEM-resident chain growth along the
+# schedule (the epilogue megakernel's planning half)
+# ----------------------------------------------------------------------
+
+# live-set ceiling for one fused chain: whole operands + scratch slots +
+# output must be simultaneously VMEM-resident (vs ~16 MB/core), leaving
+# headroom for the final output's store buffering.  Deliberately larger
+# than the per-GEMM tile budget (VMEM_BUDGET_BYTES) — a chain replaces
+# several kernels' working sets with one residency certified by the
+# lifetime planner's linear scan.
+CHAIN_VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+# batch cells are unrolled into per-cell MXU dots inside the megakernel;
+# cap the unroll so open-batch sampling networks keep sane trace sizes
+CHAIN_MAX_BATCH = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedChainSpec:
+    """One planned VMEM-resident GEMM chain.
+
+    ``positions`` are consecutive entries of one execution segment's step
+    sequence (never crossing the prologue/epilogue boundary — chains are
+    planned per segment); step ``t``'s carry operand is step ``t-1``'s
+    output (``carry_side[t]`` ∈ {"l", "r"}, ``""`` at the head).
+    ``external_nodes`` are the env keys the executor gathers as kernel
+    operands (step 0's pair, then one non-carry operand per step);
+    ``slot_ids``/``slot_elems`` are the scratch-slot assignment of the
+    interior intermediates from the chain-local linear scan
+    (:func:`repro.lowering.memory.chain_segment_plan`), and
+    ``live_bytes`` is that scan's certified VMEM peak.
+
+    The saved-traffic accounting keeps the two eliminations disjoint so
+    nothing is double-charged: ``roundtrip_bytes_saved`` is the plain
+    HBM write+read of each interior intermediate, while
+    ``transpose_bytes_saved`` is only the *extra* permute-copy traffic
+    the unfused backends would have paid (``GemmSpec.transpose_bytes``,
+    already zero on fused/einsum steps) — a carry operand's transpose
+    bandwidth is therefore counted once, not once per elimination.
+    """
+
+    segment: str
+    positions: tuple[int, ...]
+    nodes: tuple[tuple[int, int, int], ...]  # (lhs, rhs, out) env keys
+    carry_side: tuple[str, ...]
+    external_nodes: tuple[int, ...]
+    out_node: int
+    live_bytes: int
+    slot_ids: tuple[int, ...]
+    slot_elems: tuple[int, ...]
+    roundtrip_bytes_saved: float
+    transpose_bytes_saved: float
+
+    @property
+    def n_steps(self) -> int:
+        return len(self.positions)
+
+    @property
+    def hbm_bytes_saved(self) -> float:
+        """Modeled HBM bytes one execution of this chain avoids."""
+        return self.roundtrip_bytes_saved + self.transpose_bytes_saved
+
+
+@dataclasses.dataclass
+class ChainPlan:
+    """All fused chains planned for one ``(tree, S)`` schedule."""
+
+    chains: tuple[FusedChainSpec, ...]
+    vmem_budget: int
+
+    def by_segment(self, name: str) -> dict[int, FusedChainSpec]:
+        """start position → chain, for one segment's dispatch loop."""
+        return {
+            c.positions[0]: c for c in self.chains if c.segment == name
+        }
+
+    def segment_chains(self, name: str) -> list[FusedChainSpec]:
+        return [c for c in self.chains if c.segment == name]
+
+    @property
+    def num_chains(self) -> int:
+        return len(self.chains)
+
+    @property
+    def num_multi(self) -> int:
+        """Chains fusing ≥ 2 steps (all of them, per the planner's
+        ``min_len`` — kept explicit for reporting/regression gates)."""
+        return sum(1 for c in self.chains if c.n_steps >= 2)
+
+    def max_live_bytes(self) -> int:
+        return max((c.live_bytes for c in self.chains), default=0)
+
+    def hbm_bytes_saved(self, segment: str = "naive") -> float:
+        """Modeled HBM bytes saved per execution of ``segment`` (for the
+        epilogue that is once per slice)."""
+        return sum(
+            c.hbm_bytes_saved for c in self.chains if c.segment == segment
+        )
+
+    def modeled_time_saved_s(self, segment: str = "naive") -> float:
+        """Per-execution seconds of HBM traffic the chains eliminate —
+        the refiner cost-model correction for fused steps (their
+        round-trip and transpose charges no longer apply)."""
+        return self.hbm_bytes_saved(segment) / TPU_HBM_BW
+
+    def summary(self) -> dict:
+        return {
+            "chains": self.num_chains,
+            "multi_step_chains": self.num_multi,
+            "max_chain_len": max(
+                (c.n_steps for c in self.chains), default=0
+            ),
+            "max_live_bytes": self.max_live_bytes(),
+            "vmem_budget": self.vmem_budget,
+            "hbm_bytes_saved": {
+                seg: self.hbm_bytes_saved(seg)
+                for seg in sorted({c.segment for c in self.chains})
+            },
+        }
+
+
+def _chainable(spec: GemmSpec, real_bytes: int) -> bool:
+    """Whether one step may participate in a fused chain: fp32-component
+    dtypes only (the kernel accumulates in fp32), at least one axis per
+    operand/output (Pallas wants a real block; the refiner's degenerate
+    scalar nodes stay unfused), bounded batch unroll."""
+    f = spec.form
+    return (
+        real_bytes <= 4
+        and len(f.inds_a) >= 1
+        and len(f.inds_b) >= 1
+        and len(f.inds_out) >= 1
+        and f.B <= CHAIN_MAX_BATCH
+    )
+
+
+def _build_chain(
+    segment: str,
+    run: list[int],
+    step_nodes,
+    specs,
+    nbytes: dict[int, int],
+    itemsize: int,
+):
+    """Assemble the FusedChainSpec (or its certification plan) for one
+    candidate run of schedule positions.  Returns ``(spec, live_bytes)``."""
+    from .memory import chain_segment_plan  # lazy: avoid cycle
+
+    nodes = tuple(step_nodes[p] for p in run)
+    carry_side = [""]
+    externals = [nodes[0][0], nodes[0][1]]
+    for t in range(1, len(nodes)):
+        prev_out = nodes[t - 1][2]
+        l, r, _ = nodes[t]
+        if l == prev_out:
+            carry_side.append("l")
+            externals.append(r)
+        else:
+            carry_side.append("r")
+            externals.append(l)
+    out_node = nodes[-1][2]
+    seg = chain_segment_plan(
+        f"chain:{segment}:{run[0]}", tuple(externals), nodes, (out_node,),
+        nbytes,
+    )
+    interior = [nodes[t][2] for t in range(len(nodes) - 1)]
+    used = sorted({seg.slot_of[v] for v in interior})
+    remap = {s: d for d, s in enumerate(used)}
+    slot_ids = tuple(remap[seg.slot_of[v]] for v in interior)
+    slot_bytes = [0] * len(used)
+    for v in interior:
+        d = remap[seg.slot_of[v]]
+        slot_bytes[d] = max(slot_bytes[d], nbytes[v])
+    roundtrip = sum(2.0 * nbytes[v] for v in interior)
+    transpose = sum(specs[p].transpose_bytes for p in run)
+    spec = FusedChainSpec(
+        segment=segment,
+        positions=tuple(run),
+        nodes=nodes,
+        carry_side=tuple(carry_side),
+        external_nodes=tuple(externals),
+        out_node=out_node,
+        live_bytes=seg.peak_bytes,
+        slot_ids=slot_ids,
+        slot_elems=tuple(b // itemsize for b in slot_bytes),
+        roundtrip_bytes_saved=roundtrip,
+        transpose_bytes_saved=transpose,
+    )
+    return spec, seg.peak_bytes
+
+
+def plan_chains(
+    schedule: LoweredSchedule,
+    step_nodes: Sequence[tuple[int, int, int]],
+    segments: dict[str, tuple[int, ...]],
+    nbytes: dict[int, int],
+    *,
+    vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
+    min_len: int = 2,
+) -> ChainPlan:
+    """The fusion-boundary pass: greedily grow runs of adjacent steps
+    along each segment's execution order while the certified live set —
+    whole operands pinned, intermediates slot-assigned by the chain-local
+    linear scan — fits the VMEM budget.
+
+    ``step_nodes[p]`` are the ``(lhs, rhs, out)`` env keys of schedule
+    position ``p``; ``segments`` maps each execution segment to its
+    ordered positions, so a chain can never cross the prologue/epilogue
+    boundary, and a segment *output* (the root, or a hoisted frontier
+    buffer) can never be chain-interior — its consumer is outside the
+    segment, so adjacency fails there by construction.  ``nbytes`` is the
+    per-node buffer size from the memory plan (same dict for every
+    segment)."""
+    itemsize = int(jnp.dtype(schedule.dtype).itemsize)
+    real_bytes = real_component_bytes(schedule.dtype)
+    chains: list[FusedChainSpec] = []
+    for name, positions in segments.items():
+        i = 0
+        while i < len(positions):
+            p = positions[i]
+            if not _chainable(schedule.specs[p], real_bytes):
+                i += 1
+                continue
+            run = [p]
+            j = i
+            while j + 1 < len(positions):
+                q = positions[j + 1]
+                prev_out = step_nodes[run[-1]][2]
+                if (
+                    step_nodes[q][0] != prev_out
+                    and step_nodes[q][1] != prev_out
+                ):
+                    break
+                if not _chainable(schedule.specs[q], real_bytes):
+                    break
+                _, live = _build_chain(
+                    name, run + [q], step_nodes, schedule.specs, nbytes,
+                    itemsize,
+                )
+                if live > vmem_budget:
+                    break
+                run.append(q)
+                j += 1
+            if len(run) >= min_len:
+                spec, _ = _build_chain(
+                    name, run, step_nodes, schedule.specs, nbytes, itemsize
+                )
+                chains.append(spec)
+            i = j + 1
+    return ChainPlan(chains=tuple(chains), vmem_budget=vmem_budget)
+
+
+def plan_tree_chains(
+    tree,
+    smask: int = 0,
+    dtype=jnp.complex64,
+    *,
+    hoist: bool = True,
+    fused: bool | None = None,
+    vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
+) -> ChainPlan:
+    """Planner-side chain plan for ``(tree, S)`` — the same pass the
+    executor runs at plan construction, built directly from the tree
+    (pinned regressions, modeled benchmarks; no ContractionPlan
+    needed)."""
+    from .memory import node_nbytes  # lazy: avoid cycle
+
+    sched = refine_tree_schedule(tree, smask, dtype=dtype, fused=fused)
+    order = tree.contract_order()
+    step_nodes = tuple((*tree.children[v], v) for v in order)
+    itemsize = jnp.dtype(dtype).itemsize
+    nbytes = {
+        v: node_nbytes(tree, v, smask, itemsize) for v in tree.emask
+    }
+    segments: dict[str, tuple[int, ...]] = {
+        "naive": tuple(range(len(step_nodes)))
+    }
+    if hoist and smask and step_nodes:
+        from .partition import partition_tree  # lazy: avoid cycle
+
+        part = partition_tree(tree, smask)
+        pos = {v: k for k, v in enumerate(order)}
+        segments["prologue"] = tuple(pos[v] for v in part.invariant_nodes)
+        segments["epilogue"] = tuple(pos[v] for v in part.epilogue_nodes)
+    return plan_chains(
+        sched, step_nodes, segments, nbytes, vmem_budget=vmem_budget
     )
 
 

@@ -1,0 +1,595 @@
+"""Epilogue megakernel conformance suite (oracle-backed).
+
+The fused VMEM-resident GEMM chain (:func:`repro.kernels.contract_gemm.
+fused_chain_matmul` + the refiner's fusion-boundary pass) is gated here
+on three independent oracles:
+
+  1. randomized differential chains — the megakernel (kernel body forced,
+     ``use_kernel=True, interpret=True``) against the einsum oracle to
+     fp32 tolerance AND *bitwise* against the unfused per-step
+     ``fused_transpose_matmul`` chain at matched (whole-array) tiles,
+     real and complex-Karatsuba, plain and under ``jax.vmap``;
+  2. chain-boundary invariants on planned circuits — certified live set
+     within the VMEM budget, consecutive in-segment positions, carry
+     adjacency, dense valid slot assignment, segment outputs never
+     chain-interior, and the disjoint (no-double-charge) HBM-savings
+     accounting;
+  3. the statevector oracle end-to-end — amplitudes and sampling XEB
+     across {backend} x {hoist} x {REPRO_MEGAKERNEL}, the anytime
+     co-optimized path, the vmapped scan / sharded / resumable
+     executors, and the plan-cache fingerprint separation of the
+     ``REPRO_MEGAKERNEL`` switch.
+"""
+
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import subprocess_kwargs
+from repro.core import ContractionPlan, simplify_network, simulate_amplitude
+from repro.core.api import plan_compiled, sample_bitstrings
+from repro.core.distributed import contract_resumable
+from repro.core.executor import pair_contract_inds
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.kernels import ops
+from repro.kernels.contract_gemm import chain_reference, fused_chain_matmul
+from repro.lowering import (
+    CHAIN_VMEM_BUDGET_BYTES,
+    chain_segment_plan,
+    lower_step,
+    plan_tree_chains,
+)
+from repro.lowering.refiner import CHAIN_MAX_BATCH, default_megakernel
+from repro.quantum import statevector
+from repro.quantum.circuits import (
+    circuit_to_network,
+    random_1d_circuit,
+    sycamore_like,
+)
+
+
+# ----------------------------------------------------------------------
+# randomized chain construction (the property-based differential oracle)
+# ----------------------------------------------------------------------
+def _random_chain(rng, n_steps, *, with_batch):
+    """Generate a random fused chain in the executor's conventions.
+
+    Returns ``(forms, carry_side, externals)`` where ``externals`` are
+    the per-operand index tuples (step 0's pair, then one non-carry
+    operand per later step).  Step ``t``'s carry is step ``t-1``'s
+    ``inds_out`` verbatim — the tree-native layout handoff the
+    megakernel relies on.  ``with_batch`` threads one open (sampling)
+    index through every operand so it rides as a batch axis.
+    """
+    sizes = {}
+    counter = [0]
+
+    def fresh(k):
+        labs = []
+        for _ in range(k):
+            lab = f"x{counter[0]}"
+            counter[0] += 1
+            sizes[lab] = int(rng.integers(2, 5))
+            labs.append(lab)
+        return labs
+
+    def shuffled(inds):
+        return tuple(str(s) for s in rng.permutation(list(inds)))
+
+    open_set = set()
+    batch = []
+    if with_batch:
+        batch = fresh(1)
+        open_set.add(batch[0])
+
+    shared = fresh(int(rng.integers(1, 3)))
+    a_inds = shuffled(batch + fresh(int(rng.integers(1, 3))) + shared)
+    b_inds = shuffled(batch + shared + fresh(int(rng.integers(1, 3))))
+    _, out = pair_contract_inds(a_inds, b_inds, frozenset(open_set))
+    forms = [lower_step(a_inds, b_inds, out, sizes.__getitem__)]
+    carry_side = [""]
+    externals = [a_inds, b_inds]
+    carry = out
+    for _ in range(1, n_steps):
+        cands = [ix for ix in carry if ix not in open_set]
+        ncon = int(rng.integers(1, min(len(cands), 2) + 1))
+        con = [str(s) for s in rng.choice(cands, size=ncon, replace=False)]
+        ext = shuffled(batch + con + fresh(int(rng.integers(1, 3))))
+        side = "l" if rng.random() < 0.5 else "r"
+        pair = (carry, ext) if side == "l" else (ext, carry)
+        _, out = pair_contract_inds(*pair, frozenset(open_set))
+        forms.append(lower_step(*pair, out, sizes.__getitem__))
+        carry_side.append(side)
+        externals.append(ext)
+        carry = out
+    return tuple(forms), tuple(carry_side), externals, sizes
+
+
+def _chain_slots(forms, carry_side):
+    """Scratch-slot assignment for a synthetic chain via the same
+    chain-local linear scan the refiner's ``_build_chain`` runs."""
+    n_ext = len(forms) + 1
+    ext_keys = list(range(n_ext))
+    out_keys = [n_ext + t for t in range(len(forms))]
+    steps, nbytes = [], {}
+    for t, f in enumerate(forms):
+        elems = f.B * f.M * f.N
+        nbytes[out_keys[t]] = elems
+        if t == 0:
+            steps.append((ext_keys[0], ext_keys[1], out_keys[0]))
+        elif carry_side[t] == "l":
+            steps.append((out_keys[t - 1], ext_keys[t + 1], out_keys[t]))
+        else:
+            steps.append((ext_keys[t + 1], out_keys[t - 1], out_keys[t]))
+    for t, f in enumerate(forms):
+        if t == 0:
+            nbytes[ext_keys[0]] = f.B * f.M * f.K
+            nbytes[ext_keys[1]] = f.B * f.K * f.N
+        else:
+            mn = f.M if carry_side[t] == "r" else f.N
+            nbytes[ext_keys[t + 1]] = f.B * f.K * mn
+    seg = chain_segment_plan(
+        "test-chain", tuple(ext_keys), tuple(steps), (out_keys[-1],), nbytes
+    )
+    interior = out_keys[:-1]
+    used = sorted({seg.slot_of[v] for v in interior})
+    remap = {s: d for d, s in enumerate(used)}
+    slot_ids = tuple(remap[seg.slot_of[v]] for v in interior)
+    slot_elems = [0] * len(used)
+    for v in interior:
+        d = remap[seg.slot_of[v]]
+        slot_elems[d] = max(slot_elems[d], nbytes[v])
+    return slot_ids, tuple(slot_elems)
+
+
+def _chain_operands(rng, externals, sizes, *, complex_mode):
+    arrs = []
+    for inds in externals:
+        shape = tuple(sizes[ix] for ix in inds)
+        re = rng.standard_normal(shape).astype(np.float32)
+        if complex_mode:
+            im = rng.standard_normal(shape).astype(np.float32)
+            arrs.append((re + 1j * im).astype(np.complex64))
+        else:
+            arrs.append(re)
+    return arrs
+
+
+def _einsum_chain(forms, carry_side, operands):
+    """The chain as the executor's unfused einsum loop (allclose oracle)."""
+    carry = None
+    it = iter(operands)
+    for t, f in enumerate(forms):
+        if t == 0:
+            a, b = next(it), next(it)
+        else:
+            ext = next(it)
+            a, b = (carry, ext) if carry_side[t] == "l" else (ext, carry)
+        carry = jnp.einsum(f.expr, jnp.asarray(a), jnp.asarray(b))
+    return carry
+
+
+def _unfused_component_chain(forms, carry_side, operands):
+    """The chain as per-step ``fused_transpose_matmul`` calls at matched
+    (whole-array) tiles, components kept split with the kernel's exact
+    Karatsuba — the bitwise oracle for the megakernel body."""
+
+    def one(form, x, y):
+        out = ops.fused_matmul(
+            x, y,
+            perm_a=form.perm_a, perm_b=form.perm_b,
+            nb=len(form.batch_inds), nm=len(form.m_inds),
+            nn=len(form.n_inds), nk=len(form.k_inds),
+            bm=1 << 20, bn=1 << 20, bk=1 << 20, interpret=True,
+        )
+        if form.out_perm != tuple(range(out.ndim)):
+            out = jnp.transpose(out, form.out_perm)
+        return out
+
+    def step(form, a, b):
+        if len(a) == 2:
+            (ar, ai), (br, bi) = a, b
+            p1 = one(form, ar, br)
+            p2 = one(form, ai, bi)
+            p3 = one(form, ar + ai, br + bi)
+            return (p1 - p2, p3 - p1 - p2)
+        return (one(form, a[0], b[0]),)
+
+    def split(o):
+        o = jnp.asarray(o)
+        if jnp.iscomplexobj(o):
+            return (
+                jnp.real(o).astype(jnp.float32),
+                jnp.imag(o).astype(jnp.float32),
+            )
+        return (o.astype(jnp.float32),)
+
+    carry = None
+    it = iter(operands)
+    for t, f in enumerate(forms):
+        if t == 0:
+            a, b = split(next(it)), split(next(it))
+        else:
+            ext = split(next(it))
+            a, b = (carry, ext) if carry_side[t] == "l" else (ext, carry)
+        carry = step(f, a, b)
+    return carry
+
+
+CHAIN_CASES = [
+    # (seed, n_steps, complex_mode, with_batch)
+    (0, 2, False, False),
+    (1, 3, False, True),
+    (2, 3, True, False),
+    (3, 4, True, True),
+    (4, 2, True, True),
+    (5, 4, False, False),
+]
+
+
+@pytest.mark.parametrize("seed,n_steps,cplx,batch", CHAIN_CASES)
+def test_chain_matches_einsum(seed, n_steps, cplx, batch):
+    """Kernel body (forced) and off-TPU reference both equal the einsum
+    oracle on randomized chains."""
+    rng = np.random.default_rng(seed)
+    forms, carry_side, externals, sizes = _random_chain(
+        rng, n_steps, with_batch=batch
+    )
+    slot_ids, slot_elems = _chain_slots(forms, carry_side)
+    arrs = _chain_operands(rng, externals, sizes, complex_mode=cplx)
+    want = np.asarray(_einsum_chain(forms, carry_side, arrs))
+
+    got_kernel = ops.fused_chain(
+        arrs, forms=forms, carry_side=carry_side,
+        slot_ids=slot_ids, slot_elems=slot_elems,
+        use_kernel=True, interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_kernel), want, rtol=1e-4, atol=1e-5
+    )
+    got_ref = ops.fused_chain(
+        arrs, forms=forms, carry_side=carry_side,
+        slot_ids=slot_ids, slot_elems=slot_elems, use_kernel=False,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_ref), want, rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("seed,n_steps,cplx,batch", CHAIN_CASES[:4])
+def test_chain_bitwise_vs_unfused(seed, n_steps, cplx, batch):
+    """The megakernel is *bitwise* identical to the unfused per-step
+    ``fused_transpose_matmul`` chain at matched tiles — same per-cell MXU
+    dots, same component-split Karatsuba, same accumulation order; the
+    VMEM scratch routing changes where intermediates live, never their
+    bits."""
+    rng = np.random.default_rng(100 + seed)
+    forms, carry_side, externals, sizes = _random_chain(
+        rng, n_steps, with_batch=batch
+    )
+    slot_ids, slot_elems = _chain_slots(forms, carry_side)
+    arrs = _chain_operands(rng, externals, sizes, complex_mode=cplx)
+
+    comps = []
+    for o in arrs:
+        o = jnp.asarray(o)
+        if cplx:
+            comps.append(jnp.real(o).astype(jnp.float32))
+            comps.append(jnp.imag(o).astype(jnp.float32))
+        else:
+            comps.append(o.astype(jnp.float32))
+    got = fused_chain_matmul(
+        *comps, forms=forms, carry_side=carry_side,
+        slot_ids=slot_ids, slot_elems=slot_elems,
+        complex_mode=cplx, interpret=True,
+    )
+    want = _unfused_component_chain(forms, carry_side, arrs)
+    assert len(got) == len(want) == (2 if cplx else 1)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), (
+            seed, n_steps, cplx, batch,
+        )
+
+
+def test_chain_under_vmap():
+    """The megakernel dispatch is trace-safe under ``jax.vmap`` — the
+    executor's slice-batch scan vmaps exactly this call."""
+    rng = np.random.default_rng(42)
+    forms, carry_side, externals, sizes = _random_chain(
+        rng, 3, with_batch=False
+    )
+    slot_ids, slot_elems = _chain_slots(forms, carry_side)
+    base = [
+        _chain_operands(rng, externals, sizes, complex_mode=True)
+        for _ in range(3)
+    ]
+    stacked = [
+        jnp.stack([jnp.asarray(base[v][i]) for v in range(3)])
+        for i in range(len(externals))
+    ]
+
+    def run(*operands):
+        return ops.fused_chain(
+            list(operands), forms=forms, carry_side=carry_side,
+            slot_ids=slot_ids, slot_elems=slot_elems,
+            use_kernel=True, interpret=True,
+        )
+
+    got = jax.vmap(run)(*stacked)
+    for v in range(3):
+        want = np.asarray(_einsum_chain(forms, carry_side, base[v]))
+        np.testing.assert_allclose(
+            np.asarray(got[v]), want, rtol=1e-4, atol=1e-5
+        )
+
+
+# ----------------------------------------------------------------------
+# chain-boundary invariants on planned circuits
+# ----------------------------------------------------------------------
+def _tree_and_slices(circ, target):
+    tn, arrays = circuit_to_network(circ, bitstring="0" * circ.num_qubits)
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4, seed=0)
+    S = find_slices(tree, target, method="lifetime")
+    return tree, S, arrays
+
+
+def test_chain_boundary_invariants():
+    """Every planned chain respects the fusion boundaries: certified live
+    set within budget, consecutive positions within one segment, carry
+    adjacency between steps, dense valid scratch slots, and no segment
+    output (root / hoisted frontier) ever chain-interior."""
+    from repro.lowering.partition import partition_tree
+    from repro.lowering.refiner import refine_tree_schedule
+
+    circ = sycamore_like(4, 4, 10, seed=0)
+    tree, S, _ = _tree_and_slices(circ, 12)
+    cp = plan_tree_chains(tree, S)
+    assert cp.num_multi >= 2  # acceptance: a syc instance really fuses
+
+    order = tree.contract_order()
+    pos = {v: k for k, v in enumerate(order)}
+    step_nodes = {k: (*tree.children[v], v) for k, v in enumerate(order)}
+    part = partition_tree(tree, S)
+    segments = {
+        "naive": tuple(range(len(order))),
+        "prologue": tuple(pos[v] for v in part.invariant_nodes),
+        "epilogue": tuple(pos[v] for v in part.epilogue_nodes),
+    }
+    sched = refine_tree_schedule(tree, S)
+
+    for c in cp.chains:
+        assert c.segment in segments
+        seg_pos = segments[c.segment]
+        # consecutive within the segment's execution order
+        lo = seg_pos.index(c.positions[0])
+        assert seg_pos[lo:lo + c.n_steps] == c.positions
+        # carry adjacency + external bookkeeping
+        assert c.carry_side[0] == "" and len(c.carry_side) == c.n_steps
+        assert len(c.external_nodes) == c.n_steps + 1
+        for t in range(1, c.n_steps):
+            prev_out = step_nodes[c.positions[t - 1]][2]
+            l, r, _ = step_nodes[c.positions[t]]
+            assert (c.carry_side[t], prev_out) in (("l", l), ("r", r))
+        assert c.out_node == step_nodes[c.positions[-1]][2]
+        # segment outputs are never interior: interiors' consumers are
+        # inside the chain by the adjacency above, and the chain sits in
+        # a single segment's order, so the segment output can only be
+        # the chain tail
+        interior = {step_nodes[p][2] for p in c.positions[:-1]}
+        assert c.out_node not in interior
+        # VMEM certification + dense, capacious slots
+        assert 0 < c.live_bytes <= CHAIN_VMEM_BUDGET_BYTES
+        assert len(c.slot_ids) == c.n_steps - 1
+        if c.slot_ids:
+            assert set(c.slot_ids) == set(range(len(c.slot_elems)))
+        itemsize = jnp.dtype(sched.dtype).itemsize
+        for t, sid in enumerate(c.slot_ids):
+            form = sched.specs[c.positions[t]].form
+            assert c.slot_elems[sid] >= form.B * form.M * form.N
+        # batch unroll stays bounded
+        for p in c.positions:
+            assert sched.specs[p].form.B <= CHAIN_MAX_BATCH
+        # disjoint savings accounting: round-trips + transpose traffic,
+        # never double-charged
+        roundtrip = sum(
+            2.0 * form.B * form.M * form.N * itemsize
+            for form in (
+                sched.specs[p].form for p in c.positions[:-1]
+            )
+        )
+        assert c.roundtrip_bytes_saved == pytest.approx(roundtrip)
+        transpose = sum(
+            sched.specs[p].transpose_bytes for p in c.positions
+        )
+        assert c.transpose_bytes_saved == pytest.approx(transpose)
+        assert c.hbm_bytes_saved == pytest.approx(roundtrip + transpose)
+
+    for seg in ("naive", "prologue", "epilogue"):
+        assert cp.hbm_bytes_saved(seg) == pytest.approx(
+            sum(
+                c.hbm_bytes_saved for c in cp.chains if c.segment == seg
+            )
+        )
+
+
+# ----------------------------------------------------------------------
+# statevector-oracle E2E conformance
+# ----------------------------------------------------------------------
+AMP_CIRC = random_1d_circuit(10, 8, seed=3)
+AMP_BITS = "0110100101"
+
+
+@pytest.fixture(scope="module")
+def oracle_amp():
+    return complex(statevector.amplitude(AMP_CIRC, AMP_BITS))
+
+
+@pytest.mark.parametrize("mega", ["0", "1"])
+@pytest.mark.parametrize("hoist", [False, True])
+@pytest.mark.parametrize("backend", ["einsum", "gemm"])
+def test_amplitude_matches_statevector(
+    monkeypatch, oracle_amp, backend, hoist, mega
+):
+    """Full-stack amplitudes agree with the statevector oracle on every
+    {backend} x {hoist} x {REPRO_MEGAKERNEL} combination."""
+    monkeypatch.setenv("REPRO_MEGAKERNEL", mega)
+    res = simulate_amplitude(
+        AMP_CIRC, AMP_BITS, target_dim=8, backend=backend,
+        hoist=hoist, use_cache=False,
+    )
+    assert abs(complex(res.value) - oracle_amp) < 1e-5
+    if mega == "0":
+        assert res.report.fused_chains == 0
+        assert res.plan.chain_plan is None
+    elif backend == "gemm":
+        # the refined schedule exists on this path, so the fusion pass ran
+        assert res.plan.chain_plan is not None
+
+
+def test_amplitude_matches_statevector_anytime(monkeypatch, oracle_amp):
+    """The anytime co-optimized plan stays oracle-exact with the
+    megakernel enabled."""
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "1")
+    res = simulate_amplitude(
+        AMP_CIRC, AMP_BITS, target_dim=8, backend="gemm", hoist=True,
+        use_cache=False, optimize="anytime", search_evals=8,
+        search_workers=2,
+    )
+    assert abs(complex(res.value) - oracle_amp) < 1e-5
+
+
+@pytest.mark.parametrize("mega", ["0", "1"])
+def test_sampling_xeb_matches_statevector(monkeypatch, mega):
+    """Correlated-sampling amplitudes and XEB agree with the statevector
+    oracle with the megakernel on and off."""
+    monkeypatch.setenv("REPRO_MEGAKERNEL", mega)
+    c = random_1d_circuit(8, 6, seed=7)
+    res = sample_bitstrings(
+        c, num_samples=256, open_qubits=(1, 4, 6), target_dim=6,
+        seed=2, backend="gemm", use_cache=False,
+    )
+    psi = np.asarray(statevector.simulate(c)).reshape([2] * 8)
+    for i in range(res.batch.size):
+        bs = res.batch.bitstring_for(i)
+        ref = psi[tuple(int(b) for b in bs)]
+        assert abs(res.batch.flat()[i] - ref) < 1e-4
+    # the sampled entries' probabilities equal the statevector's — the
+    # XEB estimate is a deterministic function of them, so it is
+    # oracle-exact too (and finite)
+    probs = np.array(
+        [
+            abs(psi[tuple(int(b) for b in bs)]) ** 2
+            for bs in res.bitstrings
+        ]
+    )
+    got = np.asarray([abs(a) ** 2 for a in res.amplitudes])
+    np.testing.assert_allclose(got, probs, rtol=1e-4, atol=1e-7)
+    assert np.isfinite(res.xeb)
+
+
+def test_resumable_matches_contract_all(monkeypatch):
+    """The resumable per-slice driver dispatches the same fused chains
+    as the vmapped scan and stays exact across a simulated failure."""
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "1")
+    tree, S, arrays = _tree_and_slices(random_1d_circuit(10, 8, seed=3), 8)
+    plan = ContractionPlan(tree, S, backend="gemm")
+    assert plan.chain_plan is not None and plan.chain_plan.num_multi >= 1
+    want = np.asarray(plan.contract_all(arrays, slice_batch=4))
+    value, state = contract_resumable(plan, arrays, chunk=2)
+    np.testing.assert_allclose(
+        np.asarray(value), want, rtol=1e-5, atol=1e-6
+    )
+    assert len(state.done_ids()) == 1 << plan.num_sliced
+
+
+def test_megakernel_off_switch(monkeypatch):
+    """REPRO_MEGAKERNEL=0 disables the fusion pass (no ChainPlan, no
+    report fields) without changing values; invalid settings fail fast."""
+    tree, S, arrays = _tree_and_slices(random_1d_circuit(10, 8, seed=3), 8)
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "1")
+    on = ContractionPlan(tree, S, backend="gemm")
+    assert on.chain_plan is not None and on.chain_plan.num_multi >= 1
+    v_on = np.asarray(on.contract_all(arrays, slice_batch=4))
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+    off = ContractionPlan(tree, S, backend="gemm")
+    assert off.chain_plan is None and off._chain_dispatch == {}
+    v_off = np.asarray(off.contract_all(arrays, slice_batch=4))
+    np.testing.assert_allclose(v_on, v_off, rtol=1e-5, atol=1e-6)
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "2")
+    with pytest.raises(ValueError):
+        default_megakernel()
+
+
+def test_plan_cache_separates_megakernel(monkeypatch):
+    """REPRO_MEGAKERNEL joins the plan-cache fingerprint: toggling it
+    can never serve a plan compiled under the other setting."""
+    circ = random_1d_circuit(9, 7, seed=5)
+    tn, arrays = circuit_to_network(circ, bitstring="0" * 9)
+    tn, arrays = simplify_network(tn, arrays)
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "1")
+    p1, r1 = plan_compiled(tn, 7, backend="gemm")
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "0")
+    p2, r2 = plan_compiled(tn, 7, backend="gemm")
+    assert p1 is not p2
+    assert p2.chain_plan is None and r2.fused_chains == 0
+    monkeypatch.setenv("REPRO_MEGAKERNEL", "1")
+    p3, r3 = plan_compiled(tn, 7, backend="gemm")
+    assert p3 is p1 and r3.cache_hit
+    assert r3.fused_chains == r1.fused_chains
+
+
+# ----------------------------------------------------------------------
+# shard_map conformance (subprocess: multi-device host platform)
+# ----------------------------------------------------------------------
+SHARDED_MEGAKERNEL = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ["REPRO_MEGAKERNEL"] = "1"
+import numpy as np
+from repro.quantum.circuits import random_1d_circuit, circuit_to_network
+from repro.core import simplify_network, ContractionPlan
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.core.distributed import contract_sharded
+from repro.launch.mesh import make_host_mesh
+
+c = random_1d_circuit(10, 8, seed=3)
+tn, arrays = circuit_to_network(c, bitstring="0110100101")
+tn, arrays = simplify_network(tn, arrays)
+tree = random_greedy_tree(tn, repeats=4)
+S = find_slices(tree, 8, method="lifetime")
+dense = ContractionPlan(tree, 0).contract_all(arrays)
+plan = ContractionPlan(tree, S, backend="gemm")
+assert plan.chain_plan is not None and plan.chain_plan.num_multi >= 1, (
+    plan.chain_plan)
+mesh = make_host_mesh((4,), ("data",))
+for hoist in (False, True):
+    v = contract_sharded(plan, arrays, mesh, axis_names=("data",),
+                         slice_batch=2, hoist=hoist)
+    assert np.allclose(np.asarray(v), np.asarray(dense), atol=1e-5), hoist
+# off-switch comparison inside the same sharded harness
+os.environ["REPRO_MEGAKERNEL"] = "0"
+plan0 = ContractionPlan(tree, S, backend="gemm")
+assert plan0.chain_plan is None
+v0 = contract_sharded(plan0, arrays, mesh, axis_names=("data",),
+                      slice_batch=2, hoist=True)
+assert np.allclose(np.asarray(v0), np.asarray(dense), atol=1e-5)
+print("DONE")
+"""
+
+
+def test_contract_sharded_megakernel():
+    """Fused chains dispatch identically under the shard_map executor
+    (4 host devices), megakernel on and off."""
+    r = subprocess.run(
+        [sys.executable, "-c", SHARDED_MEGAKERNEL],
+        capture_output=True, text=True, timeout=900,
+        **subprocess_kwargs(),
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]

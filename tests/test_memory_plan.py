@@ -590,3 +590,20 @@ def test_syc12_peak_regression():
     mem = plan_memory(tree, S, itemsize=pinned["itemsize"])
     assert mem.peak_bytes <= pinned["peak_bytes"]
     assert mem.peak_bytes_hoisted <= pinned["peak_bytes_hoisted"]
+
+    # fusion-boundary pass: the chain planner must keep finding at least
+    # the pinned number of multi-step VMEM chains on this plan, every
+    # chain's certified live set must respect both the pinned fused peak
+    # and the hard VMEM budget, and the modeled epilogue HBM savings
+    # (round-trips + transpose traffic, counted disjointly) must not
+    # regress below the pinned floor.
+    from repro.lowering import CHAIN_VMEM_BUDGET_BYTES, plan_tree_chains
+
+    cp = plan_tree_chains(tree, S)
+    assert cp.num_multi >= pinned["fused_chains"]
+    assert cp.max_live_bytes() <= pinned["chain_peak_bytes"]
+    assert cp.max_live_bytes() <= CHAIN_VMEM_BUDGET_BYTES
+    assert (
+        cp.hbm_bytes_saved("epilogue")
+        >= pinned["chain_hbm_bytes_saved_epilogue"]
+    )
