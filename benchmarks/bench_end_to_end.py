@@ -65,6 +65,7 @@ def run(circuit: str = "syc-12") -> list[str]:
         "pipelines disagree on the amplitude!"
     )
     rows.extend(megakernel_rows(circuit, plans["paper_faithful"], arrays))
+    rows.extend(telemetry_rows())
     return rows
 
 
@@ -130,6 +131,106 @@ def megakernel_rows(
             f"{seg}:{int(v)}" for seg, v in sorted(hbm_saved.items())
         ),
     ]
+
+
+def telemetry_rows(
+    circuits=("syc-12", "zn-12"),
+    trajectory_dir: str = "experiments/obs",
+) -> list[str]:
+    """Observability ablation on the paper workloads: tracer overhead
+    (the same compiled artifact executed untraced and traced,
+    min-over-repeat) and the model-vs-measured calibration ratio per
+    backend class on the lowered GEMM schedule — appended to the
+    trajectory history ``make_tables`` renders.
+
+    Plans are sliced to width ≤ 19 so per-slice tensors stay CPU-sized
+    on every workload (zn-12 is width-30 — a full-width contraction is
+    hours on CPU).  Small slice counts (≤ 128) measure the full vmapped
+    scan; larger ones measure a 16-slice subset of the per-slice
+    resumable path via a pre-completed checkpoint — the path where the
+    tracer wraps every slice range, i.e. the worst case for overhead."""
+    import repro.obs as obs
+    from repro.core.distributed import (
+        SliceRangeCheckpoint,
+        contract_resumable,
+    )
+    from repro.obs import trace
+
+    import jax
+    import jax.numpy as jnp
+
+    rows, records = [], []
+    prev = trace.enabled()
+    try:
+        for circuit in circuits:
+            tn, arrays = network_for(circuit)
+            tree, smask, report = plan_contraction(
+                tn, max(min(tree_width(tn) - 3, 19), 10), seed=0,
+                method="lifetime", tune=True, merge=True,
+            )
+            plan = ContractionPlan(tree, smask)
+            n_slices = 1 << report.num_sliced
+            if n_slices <= 128:
+                path = "scan"
+                run_once = lambda: np.asarray(
+                    plan.contract_all(arrays, slice_batch=4)
+                )
+            else:
+                path = "resumable[0:16)"
+                out_shape = jax.eval_shape(
+                    lambda: plan.contract_slice(list(arrays), jnp.int32(0))
+                )
+
+                def run_once():
+                    state = SliceRangeCheckpoint(
+                        n_slices,
+                        set(range(16, n_slices)),
+                        np.zeros(out_shape.shape, out_shape.dtype),
+                    )
+                    val, _ = contract_resumable(
+                        plan, arrays, chunk=4, state=state
+                    )
+                    return np.asarray(val)
+
+            warm = run_once()  # compile outside both arms
+            trace.set_enabled(False)
+            val_off, wall_off = timer(run_once, repeat=2)
+            trace.set_enabled(True)
+            obs.reset()
+            val_on, wall_on = timer(run_once, repeat=2)
+            assert val_off.tobytes() == val_on.tobytes() == warm.tobytes()
+            # calibration on the lowered GEMM schedule so the table
+            # covers the refiner's backend classes, not just einsum
+            gemm_plan = ContractionPlan(tree, smask, backend="gemm")
+            cal = obs.calibrate_plan(gemm_plan, arrays, repeat=1)
+            ratio = wall_on / wall_off if wall_off else None
+            records.append({
+                "workload": circuit,
+                "num_sliced": report.num_sliced,
+                "path": path,
+                "wall_untraced_s": wall_off,
+                "wall_traced_s": wall_on,
+                "overhead_ratio": ratio,
+                "calibration": cal.summary(),
+            })
+            rows.append(
+                f"obs_overhead_{circuit}_ms,{wall_on*1e3:.1f},"
+                f"untraced_ms={wall_off*1e3:.1f};ratio={ratio:.3f};"
+                f"path={path}"
+            )
+            for cls, agg in sorted(cal.ratio_by_class().items()):
+                rows.append(
+                    f"obs_calibration_{circuit}_{cls},"
+                    f"{agg['measured_s']*1e6:.1f},"
+                    f"steps={agg['count']};"
+                    f"modeled_s={agg['modeled_s']:.3e};"
+                    f"meas_model={agg['ratio']:.2f}"
+                )
+    finally:
+        trace.set_enabled(prev)
+        obs.reset()
+    append_trajectory(records, trajectory_dir)
+    return rows
 
 
 def tree_width(tn) -> int:

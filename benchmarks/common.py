@@ -59,7 +59,11 @@ def append_trajectory(records: list[dict], trajectory_dir: str) -> None:
     (the per-subsystem benchmark history rendered by ``make_tables``).
 
     Tolerates a missing/corrupt file and writes atomically (tmp +
-    ``os.replace``) so an interrupted run can't truncate the history."""
+    ``os.replace``) so an interrupted run can't truncate the history.
+    A corrupt/unreadable file is backed up to ``trajectory.json.bak``
+    (never silently overwritten) and the history restarts fresh."""
+    from repro.obs import log as obs_log
+
     os.makedirs(trajectory_dir, exist_ok=True)
     path = os.path.join(trajectory_dir, "trajectory.json")
     trajectory = {"records": []}
@@ -71,8 +75,21 @@ def append_trajectory(records: list[dict], trajectory_dir: str) -> None:
                 loaded.get("records"), list
             ):
                 trajectory = loaded
-        except (json.JSONDecodeError, OSError):
-            pass  # corrupt/unreadable trajectory: start fresh
+            else:
+                raise ValueError("unexpected trajectory.json structure")
+        except (json.JSONDecodeError, OSError, ValueError) as e:
+            bak = path + ".bak"
+            try:
+                os.replace(path, bak)
+            except OSError:
+                bak = "<unmovable>"
+            obs_log.warning(
+                f"corrupt trajectory history {path}: {e}; "
+                f"backed up to {bak}, starting fresh",
+                path=path,
+                backup=bak,
+                error=str(e),
+            )
     now = time.time()
     for r in records:
         r.setdefault("unix_time", now)

@@ -10,9 +10,11 @@ slicer vs width proxy + fused transpose credit) from the records the
 same benchmark's ``memory_rows`` appends under experiments/memory/, the §Co-optimizer table (one-shot
 pipeline vs anytime plan_search) from the records
 ``benchmarks.bench_slice_count.cooptimizer_rows`` appends under
-experiments/optimize/, and the §Megakernel table (epilogue fused-chain
+experiments/optimize/, the §Megakernel table (epilogue fused-chain
 ablation) from the records ``benchmarks.bench_end_to_end`` appends
-under experiments/megakernel/.
+under experiments/megakernel/, and the §Observability table (tracer
+overhead + model-vs-measured calibration) from the records
+``bench_end_to_end.telemetry_rows`` appends under experiments/obs/.
 
     PYTHONPATH=src python -m benchmarks.make_tables > experiments/tables.md
 """
@@ -290,6 +292,51 @@ def print_megakernel_table(megakernel_dir="experiments/megakernel") -> None:
         )
 
 
+def print_obs_table(obs_dir="experiments/obs") -> None:
+    """§Observability rows: tracer-overhead ablation (same compiled
+    artifact, untraced vs traced wall) and the model-vs-measured
+    calibration ratio per backend class, one row per (workload, class)
+    from the trajectory records ``bench_end_to_end.telemetry_rows``
+    appends."""
+    path = os.path.join(obs_dir, "trajectory.json")
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows = rec.get("records", [])
+    rows = [r for r in rows if "overhead_ratio" in r]
+    if not rows:
+        return
+    print("\n### Observability "
+          "(tracer overhead + model-vs-measured calibration)\n")
+    print("| workload | slices | wall untraced → traced | overhead | "
+          "class | steps | measured | modeled | meas/model |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        ratio = r.get("overhead_ratio")
+        lead = (
+            f"| {r.get('workload', '-')} "
+            f"| {1 << r.get('num_sliced', 0)} "
+            f"| {fmt_s(r.get('wall_untraced_s'))} → "
+            f"{fmt_s(r.get('wall_traced_s'))} "
+            f"| {'-' if ratio is None else f'{ratio:.3f}×'} "
+        )
+        by_class = (r.get("calibration") or {}).get("by_class", {})
+        if not by_class:
+            print(lead + "| - | - | - | - | - |")
+            continue
+        for i, (cls, agg) in enumerate(sorted(by_class.items())):
+            head = lead if i == 0 else "| | | | "
+            print(
+                head
+                + f"| {cls} | {agg['count']} "
+                f"| {fmt_s(agg['measured_s'])} "
+                f"| {fmt_s(agg['modeled_s'])} "
+                f"| {agg['ratio']:.2f} |"
+            )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -345,6 +392,7 @@ def main() -> None:
     print_memory_table()
     print_optimize_table()
     print_megakernel_table()
+    print_obs_table()
 
 
 if __name__ == "__main__":

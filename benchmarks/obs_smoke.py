@@ -1,0 +1,116 @@
+"""Observability smoke + tracer-overhead regression gate (CI artifact).
+
+Runs the pinned syc-12 scan path twice on the *same* compiled artifact —
+once with tracing off, once on — and asserts the traced/untraced wall
+ratio stays under a bound (the off-path is free by construction; the
+on-path must stay within budget).  Alongside the gate it exports the
+run's telemetry as CI artifacts under ``experiments/obs/``:
+
+    trace.jsonl        one Chrome complete-event per line (Perfetto-ready)
+    metrics.json       counters/gauges/histograms + per-span aggregates
+    overhead.json      the measured walls and their ratio
+    calibration.md     model-vs-measured table per backend class
+
+    PYTHONPATH=src python -m benchmarks.obs_smoke --assert-ratio 1.05
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import repro.obs as obs
+from repro.core import plan_contraction
+from repro.core.executor import ContractionPlan
+from repro.obs import trace
+
+from .common import network_for, timer
+
+
+def run(
+    circuit: str = "syc-12",
+    out_dir: str = "experiments/obs",
+    repeat: int = 5,
+    assert_ratio: float | None = None,
+) -> dict:
+    tn, arrays = network_for(circuit)
+    from .bench_end_to_end import tree_width
+
+    tree, smask, report = plan_contraction(
+        tn, max(tree_width(tn) - 3, 10), seed=0,
+        method="lifetime", tune=True, merge=True,
+    )
+    plan = ContractionPlan(tree, smask)
+
+    # one untimed call first: jit compilation must not pollute either arm
+    # (the artifact is shared — the toggle never joins the fingerprint)
+    warm = np.asarray(plan.contract_all(arrays, slice_batch=4))
+
+    prev = trace.enabled()
+    try:
+        trace.set_enabled(False)
+        val_off, wall_off = timer(
+            lambda: np.asarray(plan.contract_all(arrays, slice_batch=4)),
+            repeat=repeat,
+        )
+        trace.set_enabled(True)
+        obs.reset()
+        val_on, wall_on = timer(
+            lambda: np.asarray(plan.contract_all(arrays, slice_batch=4)),
+            repeat=repeat,
+        )
+        assert val_off.tobytes() == val_on.tobytes() == warm.tobytes(), (
+            "traced path changed the result!"
+        )
+        summary = obs.telemetry_summary()
+        cal = obs.calibrate_plan(plan, arrays, repeat=1)
+    finally:
+        trace.set_enabled(prev)
+
+    ratio = wall_on / wall_off if wall_off else float("inf")
+    os.makedirs(out_dir, exist_ok=True)
+    obs.dump_trace(os.path.join(out_dir, "trace.jsonl"))
+    with open(os.path.join(out_dir, "metrics.json"), "w") as f:
+        json.dump(summary, f, indent=2)
+    overhead = {
+        "workload": circuit,
+        "repeat": repeat,
+        "wall_untraced_s": wall_off,
+        "wall_traced_s": wall_on,
+        "ratio": ratio,
+        "num_sliced": report.num_sliced,
+    }
+    with open(os.path.join(out_dir, "overhead.json"), "w") as f:
+        json.dump(overhead, f, indent=2)
+    with open(os.path.join(out_dir, "calibration.md"), "w") as f:
+        f.write(cal.table() + "\n")
+
+    print(f"untraced {wall_off*1e3:.1f}ms  traced {wall_on*1e3:.1f}ms  "
+          f"ratio {ratio:.3f}")
+    print(cal.table())
+    if assert_ratio is not None and ratio > assert_ratio:
+        raise SystemExit(
+            f"tracer overhead regression: traced/untraced wall ratio "
+            f"{ratio:.3f} > {assert_ratio} on {circuit}"
+        )
+    return overhead
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--circuit", default="syc-12")
+    ap.add_argument("--out-dir", default="experiments/obs")
+    ap.add_argument("--repeat", type=int, default=5)
+    ap.add_argument(
+        "--assert-ratio", type=float, default=None,
+        help="fail if traced/untraced wall exceeds this bound",
+    )
+    a = ap.parse_args()
+    run(a.circuit, a.out_dir, repeat=a.repeat, assert_ratio=a.assert_ratio)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ import time
 
 import numpy as np
 
+from ..obs import trace as _trace
 from .contraction_tree import ContractionTree
 from .executor import (
     ContractionPlan,
@@ -77,6 +78,10 @@ class PlanReport:
     # epilogue megakernel metrics (PR 6)
     fused_chains: int = 0  # multi-step VMEM-resident chains planned
     chain_hbm_bytes_saved: float = 0.0  # modeled HBM bytes chains avoid/slice
+    # observability (PR 7): metrics snapshot + per-span aggregates from
+    # repro.obs.telemetry_summary(), populated only when tracing is on
+    # (REPRO_TRACE=1 or the telemetry= toggle) — None otherwise
+    telemetry: dict | None = None
 
     def row(self) -> str:
         row = (
@@ -125,6 +130,13 @@ class SimulationResult:
     plan: ContractionPlan | None = None  # carries the lowered schedule
 
 
+def _telemetry_snapshot() -> dict:
+    from .. import obs  # lazy: obs is also importable standalone
+
+    return obs.telemetry_summary()
+
+
+@_trace.traced("plan.build", cat="plan")
 def plan_contraction(
     tn,
     target_dim: int,
@@ -246,9 +258,18 @@ def plan_compiled(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    telemetry: bool | None = None,
 ) -> tuple[ContractionPlan, PlanReport]:
     """Plan + lower a network into an executable :class:`ContractionPlan`,
     consulting the compiled-plan cache.
+
+    ``telemetry=True`` forces span tracing + metrics on for this call
+    (``False`` forces off, ``None`` follows ``REPRO_TRACE``); when
+    tracing is on the returned report carries
+    ``PlanReport.telemetry`` — the :func:`repro.obs.telemetry_summary`
+    snapshot taken after planning.  The toggle never joins the plan
+    fingerprint: traced and untraced calls share cache entries and
+    produce bitwise-identical plans.
 
     The cache key is the canonical network fingerprint (structure +
     dtype + open indices, invariant under index relabeling) plus every
@@ -267,6 +288,40 @@ def plan_compiled(
     such plans are still cached but only deterministic across processes
     when ``search_wall_s=None``.
     """
+    with _trace.enabled_scope(telemetry):
+        plan, report = _plan_compiled(
+            tn, target_dim, dtype=dtype, backend=backend, method=method,
+            tune=tune, merge=merge, repeats=repeats, seed=seed,
+            use_cache=use_cache, slicing_mode=slicing_mode,
+            optimize=optimize, search_evals=search_evals,
+            search_workers=search_workers, search_wall_s=search_wall_s,
+            budget_bytes=budget_bytes,
+        )
+        if _trace.enabled():
+            report = dataclasses.replace(
+                report, telemetry=_telemetry_snapshot()
+            )
+    return plan, report
+
+
+def _plan_compiled(
+    tn,
+    target_dim: int,
+    dtype=None,
+    backend: str | None = None,
+    method: str = "lifetime",
+    tune: bool = True,
+    merge: bool = True,
+    repeats: int = 8,
+    seed: int = 0,
+    use_cache: bool = True,
+    slicing_mode: str = "width",
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
+) -> tuple[ContractionPlan, PlanReport]:
     from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
     from ..lowering.refiner import default_fused, default_megakernel
 
@@ -327,7 +382,8 @@ def plan_compiled(
         search_evals=search_evals, search_workers=search_workers,
         search_wall_s=search_wall_s, budget_bytes=budget_bytes,
     )
-    plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
+    with _trace.span("plan.lower", cat="plan", backend=backend):
+        plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
     report.backend = plan.backend
     # re-derive the two-phase metrics from the plan's own partition so the
     # report always describes the object that will execute (the memory
@@ -415,6 +471,7 @@ def simulate_amplitude(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    telemetry: bool | None = None,
 ) -> SimulationResult:
     """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
 
@@ -430,33 +487,38 @@ def simulate_amplitude(
     """
     from ..quantum.circuits import circuit_to_network  # avoid import cycle
 
-    tn, arrays = circuit_to_network(circuit, bitstring=bitstring)
-    tn, arrays = simplify_network(tn, arrays)
-    plan, report = plan_compiled(
-        tn,
-        target_dim,
-        dtype=arrays[0].dtype if arrays else None,
-        backend=backend,
-        method=method,
-        tune=tune,
-        merge=merge,
-        seed=seed,
-        use_cache=use_cache,
-        slicing_mode=slicing_mode,
-        optimize=optimize,
-        search_evals=search_evals,
-        search_workers=search_workers,
-        search_wall_s=search_wall_s,
-        budget_bytes=budget_bytes,
-    )
-    sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
-    value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
-    if hoist is not None:
-        report = dataclasses.replace(
-            report,
-            hoist=bool(hoist),
-            measured_overhead=plan.executed_overhead(bool(hoist)),
+    with _trace.enabled_scope(telemetry):
+        tn, arrays = circuit_to_network(circuit, bitstring=bitstring)
+        tn, arrays = simplify_network(tn, arrays)
+        plan, report = plan_compiled(
+            tn,
+            target_dim,
+            dtype=arrays[0].dtype if arrays else None,
+            backend=backend,
+            method=method,
+            tune=tune,
+            merge=merge,
+            seed=seed,
+            use_cache=use_cache,
+            slicing_mode=slicing_mode,
+            optimize=optimize,
+            search_evals=search_evals,
+            search_workers=search_workers,
+            search_wall_s=search_wall_s,
+            budget_bytes=budget_bytes,
         )
+        sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
+        value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
+        if hoist is not None:
+            report = dataclasses.replace(
+                report,
+                hoist=bool(hoist),
+                measured_overhead=plan.executed_overhead(bool(hoist)),
+            )
+        if _trace.enabled():
+            report = dataclasses.replace(
+                report, telemetry=_telemetry_snapshot()
+            )
     return SimulationResult(
         np.asarray(value), report, plan.tree, plan.smask, plan
     )
@@ -485,6 +547,7 @@ def sample_bitstrings(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    telemetry: bool | None = None,
 ):
     """Draw correlated bitstring samples from one batched contraction —
     the paper's flagship workload (Sec. VI: 1M correlated Sycamore samples).
@@ -541,39 +604,44 @@ def sample_bitstrings(
             f"base_bitstring must be {n} chars of 0/1, got {base_bitstring!r}"
         )
 
-    tn, arrays = batch_mod.open_batch_network(
-        circuit, base_bitstring, open_qubits
-    )
-    # open indices cannot be sliced, so the width floor is the batch rank
-    plan, report = plan_compiled(
-        tn,
-        max(target_dim, len(open_qubits) + 1),
-        dtype=arrays[0].dtype if arrays else None,
-        backend=backend,
-        method=method,
-        tune=tune,
-        merge=merge,
-        seed=seed,
-        use_cache=use_cache,
-        slicing_mode=slicing_mode,
-        optimize=optimize,
-        search_evals=search_evals,
-        search_workers=search_workers,
-        search_wall_s=search_wall_s,
-        budget_bytes=budget_bytes,
-    )
-    amps = batch_mod.contract_amplitude_batch(
-        plan, arrays, slice_batch=slice_batch, mesh=mesh,
-        axis_names=axis_names, hoist=hoist,
-    )
-    if hoist is not None:
-        report = dataclasses.replace(
-            report,
-            hoist=bool(hoist),
-            measured_overhead=plan.executed_overhead(bool(hoist)),
+    with _trace.enabled_scope(telemetry):
+        tn, arrays = batch_mod.open_batch_network(
+            circuit, base_bitstring, open_qubits
         )
-    batch = AmplitudeBatch(amps, open_qubits, base_bitstring, n)
-    idx = samplers.draw(batch, num_samples, sampler=sampler, seed=seed)
+        # open indices cannot be sliced: the width floor is the batch rank
+        plan, report = plan_compiled(
+            tn,
+            max(target_dim, len(open_qubits) + 1),
+            dtype=arrays[0].dtype if arrays else None,
+            backend=backend,
+            method=method,
+            tune=tune,
+            merge=merge,
+            seed=seed,
+            use_cache=use_cache,
+            slicing_mode=slicing_mode,
+            optimize=optimize,
+            search_evals=search_evals,
+            search_workers=search_workers,
+            search_wall_s=search_wall_s,
+            budget_bytes=budget_bytes,
+        )
+        amps = batch_mod.contract_amplitude_batch(
+            plan, arrays, slice_batch=slice_batch, mesh=mesh,
+            axis_names=axis_names, hoist=hoist,
+        )
+        if hoist is not None:
+            report = dataclasses.replace(
+                report,
+                hoist=bool(hoist),
+                measured_overhead=plan.executed_overhead(bool(hoist)),
+            )
+        batch = AmplitudeBatch(amps, open_qubits, base_bitstring, n)
+        idx = samplers.draw(batch, num_samples, sampler=sampler, seed=seed)
+        if _trace.enabled():
+            report = dataclasses.replace(
+                report, telemetry=_telemetry_snapshot()
+            )
     flat = batch.flat()
     sampled_amps = flat[idx]
     probs = np.abs(sampled_amps) ** 2

@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import metrics as _metrics, trace as _trace
 from .executor import ContractionPlan
 
 
@@ -103,9 +104,17 @@ def contract_sharded(
     key = ("sharded", mesh, tuple(axis_names), slice_batch, hoist)
     cached = cache.get(key) if cache is not None else None
     if cached is not None:
-        return cached(
-            list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
-        )
+        with _trace.span(
+            "exec.sharded", cat="exec", slices=n_slices, devices=ndev,
+            hoist=hoist, cached=True,
+        ):
+            out = cached(
+                list(arrays), list(hoisted),
+                jnp.asarray(ids), jnp.asarray(valid),
+            )
+            _trace.sync(out)
+        _record_sharded_metrics(plan, n_slices, total, hoist)
+        return out
 
     @jax.jit
     def run(arrs, hbufs, ids_, valid_):
@@ -146,9 +155,36 @@ def contract_sharded(
     if cache is not None:
         # setdefault so concurrent threads converge on one jitted program
         run = cache.setdefault(key, run)
-    return run(
-        list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
-    )
+    with _trace.span(
+        "exec.sharded", cat="exec", slices=n_slices, devices=ndev,
+        hoist=hoist, cached=False,
+    ):
+        out = run(
+            list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
+        )
+        _trace.sync(out)
+    _record_sharded_metrics(plan, n_slices, total, hoist)
+    return out
+
+
+def _record_sharded_metrics(plan, n_slices, total, hoist) -> None:
+    """Work accounting shared by both contract_sharded call sites (the
+    padded total here is a multiple of ndev*slice_batch, so the padding
+    waste differs from the single-host scan's)."""
+    _metrics.inc("exec.slices_executed", n_slices)
+    if total != n_slices:
+        _metrics.inc("exec.padded_slices", total - n_slices)
+    if hoist:
+        _metrics.inc(
+            "exec.flops_executed", plan.partition.per_slice_cost * n_slices
+        )
+    else:
+        _metrics.inc(
+            "exec.flops_executed", plan.executed_flops(n_slices, hoist=False)
+        )
+    chains = plan._chain_dispatch.get("epilogue" if hoist else "naive")
+    if chains:
+        _metrics.inc("exec.chain_calls", len(chains) * n_slices)
 
 
 @dataclasses.dataclass
@@ -268,14 +304,35 @@ def contract_resumable(
             )
         ),
     )
-    for s, e in state.missing(chunk):
-        if s in failed:
-            failed.discard(s)
-            raise RuntimeError(f"simulated failure in slice range [{s},{e})")
-        acc = None
-        for sid in range(s, e):
-            r = contract(list(arrays), list(hoisted), jnp.int32(sid))
-            acc = r if acc is None else acc + r
-        state.partial = state.partial + np.asarray(acc)
-        state.add_range(s, e)
+    with _trace.span(
+        "exec.resumable", cat="exec", slices=n_slices, chunk=chunk,
+        hoist=hoist,
+    ):
+        for s, e in state.missing(chunk):
+            if s in failed:
+                failed.discard(s)
+                raise RuntimeError(
+                    f"simulated failure in slice range [{s},{e})"
+                )
+            with _trace.span(
+                "exec.slice_range", cat="exec", start=s, end=e
+            ):
+                acc = None
+                for sid in range(s, e):
+                    r = contract(list(arrays), list(hoisted), jnp.int32(sid))
+                    acc = r if acc is None else acc + r
+                _trace.sync(acc)
+            state.partial = state.partial + np.asarray(acc)
+            state.add_range(s, e)
+            _metrics.inc("exec.slices_executed", e - s)
+            if hoist:
+                _metrics.inc(
+                    "exec.flops_executed",
+                    plan.partition.per_slice_cost * (e - s),
+                )
+            else:
+                _metrics.inc(
+                    "exec.flops_executed",
+                    plan.executed_flops(e - s, hoist=False),
+                )
     return state.partial, state

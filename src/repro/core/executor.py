@@ -61,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics, trace as _trace
 from .contraction_tree import ContractionTree
 from .tensor_network import TensorNetwork, bits
 
@@ -324,6 +325,12 @@ class ContractionPlan:
             maxsize=int(os.environ.get("REPRO_HOIST_CACHE_SIZE", "8")),
             max_bytes=int(hoist_bytes) if hoist_bytes else None,
         )
+        if self.chain_plan is not None:
+            _metrics.inc("plan.chains_fused", self.chain_plan.num_multi)
+            _metrics.inc(
+                "plan.chain_hbm_bytes_saved",
+                self.chain_plan.hbm_bytes_saved("naive"),
+            )
 
     # ------------------------------------------------------------------
     @property
@@ -366,6 +373,20 @@ class ContractionPlan:
         if hoist and self.partition is not None and self.can_hoist:
             return self.partition.hoisted_overhead()
         return self.tree.slicing_overhead(self.smask)
+
+    def executed_flops(
+        self, n_slices: int | None = None, hoist: bool = True
+    ) -> float:
+        """FLOPs actually executed when contracting ``n_slices`` subtasks
+        (default: all ``2^|S|``) under the chosen mode — the quantity the
+        obs layer accumulates into ``exec.flops_executed``.  Hoisted:
+        one prologue plus ``n`` epilogues; naive: ``n`` full subtasks."""
+        total = 1 << self.num_sliced
+        n = total if n_slices is None else n_slices
+        if hoist and self.partition is not None and self.can_hoist:
+            p = self.partition
+            return p.invariant_cost + p.per_slice_cost * n
+        return self.tree.sliced_cost(self.smask) / total * n
 
     def hoist_summary(self) -> str:
         """One-line two-phase summary for examples/benchmarks."""
@@ -545,7 +566,12 @@ class ContractionPlan:
         fn = self._compiled.get(ck) or self._compiled.setdefault(
             ck, jax.jit(lambda a: self._prologue_outputs(a))
         )
-        out = fn(list(arrays))
+        with _trace.span(
+            "exec.prologue", cat="exec", buffers=len(self.hoisted_nodes)
+        ):
+            out = fn(list(arrays))
+            _trace.sync(out)
+        _metrics.inc("exec.flops_executed", self.partition.invariant_cost)
         if key is not None:
             self._hoist_cache.put(key, (out, keepalive))
         return out
@@ -580,14 +606,22 @@ class ContractionPlan:
             fn = self._compiled.get(key) or self._compiled.setdefault(
                 key, jax.jit(lambda a: self.contract_slice(a, 0))
             )
-            return fn(list(arrays))
+            with _trace.span(
+                "exec.contract_all", cat="exec", slices=1, hoist=False
+            ):
+                out = fn(list(arrays))
+                _trace.sync(out)
+            _metrics.inc("exec.slices_executed", 1)
+            _metrics.inc(
+                "exec.flops_executed", self.executed_flops(1, hoist=False)
+            )
+            return out
         hoist = default_hoist() if hoist is None else bool(hoist)
         hoist = hoist and self.can_hoist
         slice_batch = max(1, min(slice_batch, n_slices))
         n_batches = -(-n_slices // slice_batch)
         total = n_batches * slice_batch
         padded = total != n_slices
-        hoisted = self.contract_prologue(arrays) if hoist else []
         key = ("all", slice_batch, hoist)
         fn = self._compiled.get(key)
         if fn is None:
@@ -631,7 +665,36 @@ class ContractionPlan:
                 return acc
 
             fn = self._compiled.setdefault(key, run)
-        return fn(list(arrays), list(hoisted))
+        with _trace.span(
+            "exec.contract_all",
+            cat="exec",
+            slices=n_slices,
+            slice_batch=slice_batch,
+            hoist=hoist,
+            backend=self.backend,
+        ):
+            hoisted = self.contract_prologue(arrays) if hoist else []
+            out = fn(list(arrays), list(hoisted))
+            _trace.sync(out)
+        _metrics.inc("exec.slices_executed", n_slices)
+        if padded:
+            _metrics.inc("exec.padded_slices", total - n_slices)
+        if hoist:
+            # prologue FLOPs are counted where the prologue actually runs
+            # (contract_prologue — a hoist-cache hit executes nothing)
+            _metrics.inc(
+                "exec.flops_executed",
+                self.partition.per_slice_cost * n_slices,
+            )
+        else:
+            _metrics.inc(
+                "exec.flops_executed",
+                self.executed_flops(n_slices, hoist=False),
+            )
+        chains = self._chain_dispatch.get("epilogue" if hoist else "naive")
+        if chains:
+            _metrics.inc("exec.chain_calls", len(chains) * n_slices)
+        return out
 
 
 def contract_dense(

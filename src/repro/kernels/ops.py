@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..obs import trace as _trace
 from . import ref
 from .contract_gemm import (
     chain_reference,
@@ -68,7 +69,10 @@ def matmul(
         return ref.matmul_ref(a, b)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
-    out = tiled_matmul(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    # host-side XLA-profile annotation only (repro.obs.trace.annotate is
+    # a no-op unless REPRO_TRACE=1, and never touches the traced graph)
+    with _trace.annotate("ops.matmul"):
+        out = tiled_matmul(ap, bp, bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n]
 
 
@@ -139,10 +143,11 @@ def fused_matmul(
         a2 = jnp.transpose(a, perm_a).reshape(B, M, K)
         b2 = jnp.transpose(b, perm_b).reshape(B, K, N)
         return jnp.matmul(a2, b2).reshape(batch_shape + m_shape + n_shape)
-    return fused_transpose_matmul(
-        a, b, perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
-        bm=bm, bn=bn, bk=bk, interpret=interpret,
-    )
+    with _trace.annotate("ops.fused_matmul"):
+        return fused_transpose_matmul(
+            a, b, perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
+            bm=bm, bn=bn, bk=bk, interpret=interpret,
+        )
 
 
 def fused_chain(
@@ -189,13 +194,14 @@ def fused_chain(
         forms=tuple(forms), carry_side=tuple(carry_side),
         complex_mode=complex_mode,
     )
-    if use_kernel:
-        out = fused_chain_matmul(
-            *comps, slot_ids=tuple(slot_ids), slot_elems=tuple(slot_elems),
-            interpret=interpret, **kw,
-        )
-    else:
-        out = chain_reference(comps, **kw)
+    with _trace.annotate("ops.fused_chain"):
+        if use_kernel:
+            out = fused_chain_matmul(
+                *comps, slot_ids=tuple(slot_ids),
+                slot_elems=tuple(slot_elems), interpret=interpret, **kw,
+            )
+        else:
+            out = chain_reference(comps, **kw)
     if complex_mode:
         re, im = out
         return re + 1j * im

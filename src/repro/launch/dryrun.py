@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import SHAPES, cell_applicable, get_config
+from ..obs import log as obs_log
 from ..models import build_model
 from ..parallel.sharding import (
     abstract_params,
@@ -205,17 +206,18 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(res, f, indent=2)
     if "error" in res:
-        print(f"FAIL {tag}: {res['error']}")
+        obs_log.error(f"FAIL {tag}: {res['error']}", tag=tag)
         raise SystemExit(1)
     if "skipped" in res:
-        print(f"SKIP {tag}: {res['skipped']}")
+        obs_log.info(f"SKIP {tag}: {res['skipped']}", tag=tag)
         return
     r = res["roofline"]
-    print(
+    obs_log.info(
         f"OK {tag}: compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
         f"collective={r['collective_s']:.3e}s dominant={r['dominant']} "
         f"useful={res['useful_ratio'] and round(res['useful_ratio'],3)} "
-        f"compile={res['compile_s']}s"
+        f"compile={res['compile_s']}s",
+        tag=tag,
     )
 
 

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, smoke_shrink
+from ..obs import log as obs_log
 from ..models import build_model
 from ..parallel.sharding import init_params
 from ..train.train_step import make_decode_step, make_prefill_step
@@ -105,11 +106,12 @@ def main() -> None:
         prompt_len=args.prompt_len,
         gen_tokens=args.gen,
     )
-    print(
+    obs_log.info(
         f"prefill {r['prefill_s']*1e3:.1f} ms, decode {r['decode_s']*1e3:.1f} ms"
-        f" → {r['decode_tok_per_s']:.1f} tok/s"
+        f" → {r['decode_tok_per_s']:.1f} tok/s",
+        prefill_s=r["prefill_s"], decode_s=r["decode_s"],
     )
-    print("sample:", r["generated"][0][:16])
+    obs_log.info(f"sample: {r['generated'][0][:16]}")
 
 
 if __name__ == "__main__":

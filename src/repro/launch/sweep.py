@@ -11,6 +11,8 @@ import os
 import subprocess
 import sys
 
+from ..obs import log as obs_log
+
 ORDER = [
     "mamba2-130m",
     "seamless-m4t-medium",
@@ -48,7 +50,7 @@ def main() -> None:
             with open(path) as f:
                 prev = json.load(f)
             if "error" not in prev:
-                print(f"CACHED {tag}", flush=True)
+                obs_log.info(f"CACHED {tag}", tag=tag)
                 continue
         cmd = [
             sys.executable, "-m", "repro.launch.dryrun",
@@ -64,18 +66,18 @@ def main() -> None:
                 capture_output=True, text=True, cwd=os.getcwd(),
             )
             out = (r.stdout + r.stderr).strip().splitlines()
-            print(out[-1] if out else f"?? {tag}", flush=True)
+            obs_log.info(out[-1] if out else f"?? {tag}", tag=tag)
             if r.returncode == 0:
                 n_ok += 1
             else:
                 n_fail += 1
         except subprocess.TimeoutExpired:
-            print(f"TIMEOUT {tag}", flush=True)
+            obs_log.warning(f"TIMEOUT {tag}", tag=tag)
             with open(path, "w") as f:
                 json.dump({"arch": arch, "shape": shape, "mesh": mesh,
                            "error": "compile timeout"}, f)
             n_fail += 1
-    print(f"done: ok={n_ok} fail={n_fail}", flush=True)
+    obs_log.info(f"done: ok={n_ok} fail={n_fail}", ok=n_ok, fail=n_fail)
 
 
 if __name__ == "__main__":

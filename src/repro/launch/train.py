@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
+from ..obs import log as obs_log
 from ..configs import get_config, smoke_shrink
 from ..data.pipeline import SyntheticTextDataset
 from ..models import build_model
@@ -124,7 +125,7 @@ def train(
         ))
         state = mgr.restore(template, shardings=st_sh)
         start_step = int(np.asarray(state.step))
-        print(f"resumed from step {start_step}")
+        obs_log.info(f"resumed from step {start_step}", step=start_step)
     else:
         state = init_state(model, ocfg, jax.random.PRNGKey(seed))
         state = jax.device_put(state, st_sh)
@@ -141,13 +142,17 @@ def train(
         loss = float(metrics["loss"])
         dt = time.perf_counter() - t0
         if dog.observe(step, dt):
-            print(f"[watchdog] step {step} slow: {dt:.2f}s (ema {dog.ema:.2f}s)")
+            obs_log.warning(
+                f"[watchdog] step {step} slow: {dt:.2f}s (ema {dog.ema:.2f}s)",
+                step=step, dt_s=dt, ema_s=dog.ema,
+            )
         losses.append(loss)
         if step % log_every == 0 or step == steps - 1:
-            print(
+            obs_log.info(
                 f"step {step:5d} loss {loss:8.4f} "
                 f"gnorm {float(metrics['grad_norm']):7.3f} "
-                f"lr {float(metrics['lr']):.2e} {dt*1e3:7.1f} ms"
+                f"lr {float(metrics['lr']):.2e} {dt*1e3:7.1f} ms",
+                step=step, loss=loss, dt_s=dt,
             )
         if mgr and (step + 1) % ckpt_every == 0:
             mgr.save(step + 1, state)
@@ -178,7 +183,7 @@ def main() -> None:
         ckpt_every=args.ckpt_every,
         lr=args.lr,
     )
-    print(f"first loss {losses[0]:.4f} → last loss {losses[-1]:.4f}")
+    obs_log.info(f"first loss {losses[0]:.4f} → last loss {losses[-1]:.4f}")
 
 
 if __name__ == "__main__":

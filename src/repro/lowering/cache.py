@@ -35,6 +35,8 @@ import threading
 from collections import OrderedDict
 from typing import Any, Hashable, Sequence
 
+from ..obs import metrics as _metrics
+
 
 def network_fingerprint(tn, dtype=None, extra: tuple = ()) -> str:
     """Canonical SHA-256 fingerprint of a tensor network's structure.
@@ -134,6 +136,11 @@ class PlanEntry:
 class PlanCache:
     """Thread-safe LRU cache of compiled contraction plans."""
 
+    #: prefix for the obs counters this cache bumps (``<prefix>.hits`` /
+    #: ``<prefix>.misses``); subclasses override so their traffic is
+    #: attributable separately in a metrics snapshot.
+    _metric = "plan_cache"
+
     def __init__(self, maxsize: int = 64):
         self.maxsize = maxsize
         self._entries: OrderedDict[str, PlanEntry] = OrderedDict()
@@ -146,9 +153,11 @@ class PlanCache:
             ent = self._entries.get(key)
             if ent is None:
                 self.misses += 1
+                _metrics.inc(f"{self._metric}.misses")
                 return None
             self._entries.move_to_end(key)
             self.hits += 1
+            _metrics.inc(f"{self._metric}.hits")
             return ent
 
     def put(self, key: str, entry: PlanEntry) -> None:
@@ -198,11 +207,15 @@ class HoistCache(PlanCache):
     always kept, even when it alone exceeds the bound: a best-effort LRU
     bound, not an admission policy)."""
 
+    _metric = "hoist_cache"
+
     def __init__(self, maxsize: int = 8, max_bytes: int | None = None):
         super().__init__(maxsize=maxsize)
         self.max_bytes = max_bytes
         self._entry_bytes: OrderedDict[str, int] = OrderedDict()
         self.total_bytes = 0
+        self.evictions = 0
+        self.evicted_bytes = 0
 
     @staticmethod
     def entry_nbytes(value) -> int:
@@ -226,7 +239,12 @@ class HoistCache(PlanCache):
                 )
             ):
                 evicted, _ = self._entries.popitem(last=False)
-                self.total_bytes -= self._entry_bytes.pop(evicted)
+                freed = self._entry_bytes.pop(evicted)
+                self.total_bytes -= freed
+                self.evictions += 1
+                self.evicted_bytes += freed
+                _metrics.inc(f"{self._metric}.evictions")
+                _metrics.inc(f"{self._metric}.evicted_bytes", freed)
 
     def clear(self) -> None:
         with self._lock:
@@ -235,6 +253,19 @@ class HoistCache(PlanCache):
             self.total_bytes = 0
             self.hits = 0
             self.misses = 0
+            self.evictions = 0
+            self.evicted_bytes = 0
+
+    def stats(self) -> dict:
+        out = super().stats()
+        with self._lock:
+            out.update(
+                total_bytes=self.total_bytes,
+                max_bytes=self.max_bytes,
+                evictions=self.evictions,
+                evicted_bytes=self.evicted_bytes,
+            )
+        return out
 
 
 #: process-global cache used by :mod:`repro.core.api`

@@ -1,0 +1,214 @@
+"""Model-vs-measured calibration: per-node wall against the refiner model.
+
+The refiner chooses backends by ``modeled_time_s`` (an F(M,N,K)
+efficiency model over GEMM shapes), the slicer trusts
+``modeled_node_time`` (Eq. 4 cost algebra at modeled bandwidth), and the
+lifetime planner certifies live-set peaks — but until this module nothing
+ever *checked* those models against real hardware.  :func:`calibrate_plan`
+executes a plan's steps eagerly, one at a time, with a
+``block_until_ready`` fence around each, and joins the measured walls
+with the modeled per-slice times into a per-backend-class table
+(``pallas`` / ``pallas_fused`` / ``chain`` / ``dot`` / ``einsum``).
+
+The measured/modeled ratio per class is the feedback signal the
+ROADMAP's adaptive refiner and work-stealing scheduler need: a class
+with ratio ≫ 1 means the model flatters that backend and the refiner's
+choices are suspect on this machine; ratios drifting apart across
+classes mean the crossover thresholds need re-tuning.
+
+Caveats by construction: eager per-step execution measures kernels
+*without* XLA's cross-step fusion, so absolute walls sit above the jitted
+path — the *ratios between classes* are the calibrated signal, not the
+totals.  First-call compile time is excluded via warmup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class CalibrationRow:
+    """One executed step (or fused chain) of the plan."""
+
+    node: int  # tree node id of the step output (chain: its out node)
+    backend: str  # pallas | pallas_fused | dot | einsum | chain
+    measured_s: float  # min-over-repeat eager wall, block_until_ready
+    modeled_s: float  # refiner / cost-model per-slice seconds
+    flops: float  # modeled real-multiply FLOPs of the step (per slice)
+
+    @property
+    def ratio(self) -> float:
+        return self.measured_s / self.modeled_s if self.modeled_s else float("inf")
+
+
+@dataclasses.dataclass
+class CalibrationReport:
+    rows: list[CalibrationRow]
+    backend: str  # the plan's execution backend ("einsum" | "gemm")
+    num_steps: int
+    peak_bytes: int  # certified naive live-set peak (lowering/memory.py)
+    peak_bytes_hoisted: int  # certified prologue/epilogue peak
+
+    def ratio_by_class(self) -> dict[str, dict]:
+        """Per backend class: total measured, total modeled, their ratio,
+        and the step count — the headline calibration table."""
+        agg: dict[str, dict] = {}
+        for r in self.rows:
+            a = agg.setdefault(
+                r.backend,
+                {"count": 0, "measured_s": 0.0, "modeled_s": 0.0},
+            )
+            a["count"] += 1
+            a["measured_s"] += r.measured_s
+            a["modeled_s"] += r.modeled_s
+        for a in agg.values():
+            a["ratio"] = (
+                a["measured_s"] / a["modeled_s"]
+                if a["modeled_s"]
+                else float("inf")
+            )
+        return agg
+
+    def table(self) -> str:
+        """Markdown model-vs-measured table per backend class."""
+        lines = [
+            "| class | steps | measured (s) | modeled (s) | meas/model |",
+            "|---|---|---|---|---|",
+        ]
+        for cls, a in sorted(self.ratio_by_class().items()):
+            lines.append(
+                f"| {cls} | {a['count']} | {a['measured_s']:.3e} "
+                f"| {a['modeled_s']:.3e} | {a['ratio']:.2f} |"
+            )
+        return "\n".join(lines)
+
+    def summary(self) -> dict:
+        """JSON-serializable form (trajectory records, CI artifacts)."""
+        return {
+            "backend": self.backend,
+            "num_steps": self.num_steps,
+            "peak_bytes": self.peak_bytes,
+            "peak_bytes_hoisted": self.peak_bytes_hoisted,
+            "by_class": self.ratio_by_class(),
+        }
+
+
+def _time_call(fn, repeat: int) -> tuple[float, object]:
+    """Min-over-repeat eager wall of ``fn()`` with a device fence; one
+    untimed warmup call first so backend compilation (Pallas kernels
+    compile on first dispatch) never pollutes the measurement."""
+    import jax
+
+    out = jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(max(1, repeat)):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
+    """Execute one slice of ``plan`` step-by-step (eagerly, fenced) and
+    join each step's measured wall with its modeled per-slice time.
+
+    Honors the plan's fused-chain dispatch (``_chain_dispatch["naive"]``)
+    so chain steps are measured as the single ``apply_chain`` call they
+    execute as, and classed ``"chain"`` with the chain's modeled time
+    (sum of member specs minus the modeled HBM traffic saving).  Returns
+    a :class:`CalibrationReport`.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..core.merging import TPU_HBM_BW, modeled_node_time
+    from ..obs import trace
+
+    # slice the leaves for the concrete slice assignment
+    svals = [(slice_id >> p) & 1 for p in range(plan.num_sliced)]
+    env: dict[int, object] = {}
+    for i in range(len(arrays)):
+        a = jnp.asarray(arrays[i])
+        for axis, spos in plan.leaf_specs[i]:
+            a = lax.index_in_dim(a, svals[spos], axis=axis, keepdims=False)
+        env[i] = a
+
+    chains = plan._chain_dispatch.get("naive", {})
+    n_sub = 1 << plan.num_sliced
+    rows: list[CalibrationRow] = []
+    k = 0
+    while k < len(plan.steps):
+        ch = chains.get(k)
+        if ch is not None:
+            from ..lowering import gemm_form
+
+            specs = [plan.schedule.specs[p] for p in ch.positions]
+            operands = [env[n] for n in ch.external_nodes]
+            with trace.span("calib.node", cat="calib", node=ch.out_node):
+                measured, out = _time_call(
+                    lambda: gemm_form.apply_chain(ch, specs, operands),
+                    repeat,
+                )
+            env[ch.out_node] = out
+            modeled = (
+                sum(s.modeled_time_s for s in specs)
+                - ch.hbm_bytes_saved / TPU_HBM_BW
+            )
+            flops = sum(s.form.flops for s in specs)
+            rows.append(
+                CalibrationRow(
+                    node=ch.out_node,
+                    backend="chain",
+                    measured_s=measured,
+                    modeled_s=max(modeled, 0.0),
+                    flops=flops,
+                )
+            )
+            k += ch.n_steps
+            continue
+        st = plan.steps[k]
+        a, b = env[st.lhs], env[st.rhs]
+        if plan.schedule is None:
+            expr = st.expr
+            with trace.span("calib.node", cat="calib", node=st.out):
+                measured, out = _time_call(
+                    lambda: jnp.einsum(expr, a, b), repeat
+                )
+            modeled = (
+                modeled_node_time(plan.tree, st.out, plan.smask) / n_sub
+            )
+            cls = "einsum"
+            flops = 0.0
+        else:
+            from ..lowering import gemm_form
+
+            spec = plan.schedule.specs[k]
+            with trace.span("calib.node", cat="calib", node=st.out):
+                measured, out = _time_call(
+                    lambda: gemm_form.apply(spec, a, b), repeat
+                )
+            modeled = spec.modeled_time_s
+            cls = spec.backend
+            flops = spec.form.flops
+        env[st.out] = out
+        rows.append(
+            CalibrationRow(
+                node=st.out,
+                backend=cls,
+                measured_s=measured,
+                modeled_s=modeled,
+                flops=flops,
+            )
+        )
+        k += 1
+
+    mem = plan.memory_plan()
+    return CalibrationReport(
+        rows=rows,
+        backend=plan.backend,
+        num_steps=len(plan.steps),
+        peak_bytes=mem.peak_bytes,
+        peak_bytes_hoisted=mem.peak_bytes_hoisted,
+    )

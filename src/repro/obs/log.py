@@ -1,0 +1,57 @@
+"""Structured logger for launch-layer status lines.
+
+The launch scripts (`train.py`, `sweep.py`, `serve.py`, `dryrun.py`)
+used bare ``print``; this routes them through one level-filtered logger
+while keeping the stdout text **byte-identical** — the sweep-resume
+parser greps ``sweep.py``'s last stdout line, so the message is printed
+verbatim (no timestamp/level prefix) whenever its level passes the
+threshold.
+
+``REPRO_LOG_LEVEL`` ∈ {DEBUG, INFO, WARNING, ERROR} (default INFO) sets
+the threshold and is read per call so tests can flip it without
+re-imports.  Each emitted line also records a structured
+:func:`repro.obs.trace.instant` event (cat ``"log"``) carrying the
+level and any keyword fields — on traced runs the log stream lands in
+the same JSONL timeline as the spans.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+from . import trace
+
+LEVELS = {"DEBUG": 10, "INFO": 20, "WARNING": 30, "ERROR": 40}
+DEFAULT_LEVEL = "INFO"
+
+
+def _threshold() -> int:
+    v = os.environ.get("REPRO_LOG_LEVEL", DEFAULT_LEVEL).upper()
+    return LEVELS.get(v, LEVELS[DEFAULT_LEVEL])
+
+
+def log(level: str, msg: str, **fields) -> None:
+    """Emit ``msg`` verbatim to stdout when ``level`` passes the
+    ``REPRO_LOG_LEVEL`` threshold; always leave a structured instant
+    event when tracing is on."""
+    trace.instant(msg, cat="log", level=level, **fields)
+    if LEVELS[level] >= _threshold():
+        print(msg, flush=True)
+        sys.stdout.flush()
+
+
+def debug(msg: str, **fields) -> None:
+    log("DEBUG", msg, **fields)
+
+
+def info(msg: str, **fields) -> None:
+    log("INFO", msg, **fields)
+
+
+def warning(msg: str, **fields) -> None:
+    log("WARNING", msg, **fields)
+
+
+def error(msg: str, **fields) -> None:
+    log("ERROR", msg, **fields)

@@ -1,0 +1,159 @@
+"""Process-global metrics registry: named counters, gauges, histograms.
+
+The numeric side of the observability layer (spans answer *where time
+went*; metrics answer *how much work happened*): plan-cache and
+HoistCache hits/misses/evicted bytes, slices executed, fused-chain
+dispatches, executed FLOPs, ragged-padding waste, search accept/reject
+counts.  The registry is thread-safe, snapshot-able as one plain dict
+(:func:`snapshot`) and reset-able for tests (:func:`reset`).
+
+The module-level helpers :func:`inc` / :func:`set_gauge` /
+:func:`observe` are the instrumentation entry points: they early-return
+on the shared ``REPRO_TRACE`` flag (see :mod:`repro.obs.trace`), so hot
+paths stay zero-overhead with telemetry off.  Direct registry access
+(``REGISTRY.counter(name)``) bypasses the gate — for tests and for the
+tracer's own bookkeeping.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .trace import enabled
+
+
+class Counter:
+    """Monotonic accumulator (``int`` or ``float`` increments)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, v=1):
+        self.value += v
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def set(self, v):
+        self.value = v
+
+
+class Histogram:
+    """Streaming summary (count/total/min/max) — enough for wall-time
+    and byte-size distributions without bucket configuration."""
+
+    __slots__ = ("count", "total", "min", "max")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = None
+        self.max = None
+
+    def observe(self, v):
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "total": self.total,
+            "min": self.min,
+            "max": self.max,
+            "mean": self.total / self.count if self.count else None,
+        }
+
+
+class Registry:
+    """Thread-safe name → instrument map, one per kind."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            c = self._counters.get(name)
+            if c is None:
+                c = self._counters[name] = Counter()
+            return c
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            g = self._gauges.get(name)
+            if g is None:
+                g = self._gauges[name] = Gauge()
+            return g
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            h = self._histograms.get(name)
+            if h is None:
+                h = self._histograms[name] = Histogram()
+            return h
+
+    def snapshot(self) -> dict:
+        """One plain dict of everything — JSON-serializable, suitable
+        for ``PlanReport.telemetry`` and workflow artifacts."""
+        with self._lock:
+            return {
+                "counters": {
+                    k: c.value for k, c in sorted(self._counters.items())
+                },
+                "gauges": {
+                    k: g.value for k, g in sorted(self._gauges.items())
+                },
+                "histograms": {
+                    k: h.summary()
+                    for k, h in sorted(self._histograms.items())
+                },
+            }
+
+    def reset(self) -> None:
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+
+
+#: the process-global registry
+REGISTRY = Registry()
+
+
+def inc(name: str, v=1) -> None:
+    """Increment counter ``name`` — no-op while telemetry is off."""
+    if enabled():
+        REGISTRY.counter(name).inc(v)
+
+
+def set_gauge(name: str, v) -> None:
+    """Set gauge ``name`` — no-op while telemetry is off."""
+    if enabled():
+        REGISTRY.gauge(name).set(v)
+
+
+def observe(name: str, v) -> None:
+    """Record one histogram observation — no-op while telemetry is off."""
+    if enabled():
+        REGISTRY.histogram(name).observe(v)
+
+
+def snapshot() -> dict:
+    return REGISTRY.snapshot()
+
+
+def reset() -> None:
+    REGISTRY.reset()

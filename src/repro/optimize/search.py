@@ -56,6 +56,7 @@ from ..core.tensor_network import popcount
 from ..core.tuning import tuning_slice_finder
 from ..lowering.memory import certified_peak
 from ..lowering.partition import partition_tree
+from ..obs import metrics as _metrics, trace as _trace
 
 OBJECTIVES = ("flops", "modeled_time")
 
@@ -290,19 +291,22 @@ def plan_search(
         the mask overshoots the budget (top-up), never mutates ``tree``."""
         nonlocal evals
         evals += 1
-        part = partition_tree(tree, smask) if smask else None
-        peak = certified_peak(tree, smask, itemsize, part=part)
-        if budget is not None and peak > budget:
-            refined = refine_slices_for_peak(
-                tree, smask, target_dim, itemsize=itemsize,
-                budget_bytes=budget,
-            )
-            if refined != smask:
-                smask = refined
-                part = partition_tree(tree, smask) if smask else None
-                peak = certified_peak(tree, smask, itemsize, part=part)
-        feasible = budget is None or peak <= budget
-        return _Eval(smask, score(tree, smask, part), peak, feasible)
+        with _trace.span("search.eval", cat="search", evaluation=evals):
+            part = partition_tree(tree, smask) if smask else None
+            peak = certified_peak(tree, smask, itemsize, part=part)
+            if budget is not None and peak > budget:
+                refined = refine_slices_for_peak(
+                    tree, smask, target_dim, itemsize=itemsize,
+                    budget_bytes=budget,
+                )
+                if refined != smask:
+                    smask = refined
+                    part = partition_tree(tree, smask) if smask else None
+                    peak = certified_peak(tree, smask, itemsize, part=part)
+            feasible = budget is None or peak <= budget
+            res = _Eval(smask, score(tree, smask, part), peak, feasible)
+        _metrics.inc("search.evals")
+        return res
 
     # ------------------------------------------------------------------
     # seed the workers
@@ -408,6 +412,7 @@ def plan_search(
             worker.smask = ev.smask
             worker.log2_obj = math.log2(ev.objective)
             worker.stall = 0
+            _metrics.inc("search.restarts")
             consider(tree, ev, w, "restart")
             continue
         res = reconfigure_subtree(
@@ -435,10 +440,12 @@ def plan_search(
             worker.smask = ev.smask
             worker.log2_obj = math.log2(ev.objective)
             worker.stall = 0 if dlog < 0.0 else worker.stall + 1
+            _metrics.inc("search.accepted")
             consider(worker.tree, ev, w, "reconfigure")
         else:
             worker.tree.unsplice(res)
             worker.stall += 1
+            _metrics.inc("search.rejected")
 
     assert best is not None and best_tree is not None
     # GEMM orientation swaps children, which changes the post-order

@@ -129,7 +129,17 @@ def analyze_compiled(compiled, n_devices: int) -> Roofline:
     bytes_accessed = float(ca.get("bytes accessed", 0.0))
     try:
         hlo = compiled.as_text()
-    except Exception:
+    except Exception as e:
+        # some backends can't render HLO text (e.g. AOT-deserialized
+        # executables); collective traffic then reads as zero — say so
+        # instead of silently under-reporting the roofline
+        from ..obs import log as obs_log
+
+        obs_log.warning(
+            f"roofline: compiled.as_text() failed ({e}); "
+            "collective bytes will read as 0",
+            error=str(e),
+        )
         hlo = ""
     coll = collective_bytes(hlo)
     return Roofline(flops, bytes_accessed, coll, n_devices)

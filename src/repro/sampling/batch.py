@@ -57,17 +57,23 @@ def contract_amplitude_batch(
     and pay only the per-slice epilogue.
     """
     from ..core.executor import auto_slice_batch
+    from ..obs import trace as _trace
 
     sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
-    if mesh is None:
-        value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
-    else:
-        from ..core.distributed import contract_sharded
+    with _trace.span(
+        "sampling.contract", cat="sampling", batch=plan.batch_size,
+        sharded=mesh is not None,
+    ):
+        if mesh is None:
+            value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
+        else:
+            from ..core.distributed import contract_sharded
 
-        value = contract_sharded(
-            plan, arrays, mesh, axis_names=axis_names, slice_batch=sb,
-            hoist=hoist,
-        )
+            value = contract_sharded(
+                plan, arrays, mesh, axis_names=axis_names, slice_batch=sb,
+                hoist=hoist,
+            )
+        value = _trace.sync(value)
     return np.asarray(value)
 
 

@@ -125,10 +125,18 @@ def draw(
     seed: int = 0,
 ) -> np.ndarray:
     """Dispatch on sampler name ('frequency' | 'rejection' | 'topk')."""
-    if sampler == "frequency":
-        return frequency_sample(batch, num_samples, seed=seed)
-    if sampler == "rejection":
-        return rejection_sample(batch, num_samples, seed=seed)
-    if sampler == "topk":
-        return top_k_indices(batch, num_samples)
-    raise ValueError(f"unknown sampler {sampler!r}")
+    from ..obs import metrics as _metrics, trace as _trace
+
+    with _trace.span(
+        "sampling.draw", cat="sampling", sampler=sampler, n=num_samples
+    ):
+        if sampler == "frequency":
+            idx = frequency_sample(batch, num_samples, seed=seed)
+        elif sampler == "rejection":
+            idx = rejection_sample(batch, num_samples, seed=seed)
+        elif sampler == "topk":
+            idx = top_k_indices(batch, num_samples)
+        else:
+            raise ValueError(f"unknown sampler {sampler!r}")
+    _metrics.inc("sampling.samples_drawn", len(idx))
+    return idx
