@@ -292,6 +292,57 @@ def print_megakernel_table(megakernel_dir="experiments/megakernel") -> None:
         )
 
 
+def print_distributed_table(distributed_dir="experiments/distributed") -> None:
+    """§Multi-host rows: static uniform split vs LPT + work stealing
+    (measured threaded walls on the synthetic ragged-cost overlay) and
+    the real overlapped-reduction execution, one row per trajectory
+    record from ``bench_distributed_scaling``."""
+    paths = sorted(glob.glob(os.path.join(distributed_dir, "*.json")))
+    rows = []
+    for path in paths:
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows.extend(rec.get("records", []))
+    sched = [r for r in rows if r.get("kind") == "scheduling"]
+    execs = [r for r in rows if r.get("kind") == "execution"]
+    if sched:
+        print("\n### Multi-host scheduling "
+              "(static uniform split vs LPT + work stealing, "
+              "measured walls on ragged costs)\n")
+        print("| workload | slices | hosts | imbalance static → steal | "
+              "steals | wall static → steal | speedup |")
+        print("|---|---|---|---|---|---|---|")
+        for r in sched:
+            print(
+                f"| {r.get('workload', '-')} "
+                f"| {r.get('n_slices', '-')} "
+                f"| {r.get('hosts', '-')} "
+                f"| {r.get('schedule_imbalance_static', 0):.2f} → "
+                f"{r.get('schedule_imbalance', 0):.2f} "
+                f"| {r.get('steal_count', '-')} "
+                f"| {fmt_s(r.get('wall_static_s'))} → "
+                f"{fmt_s(r.get('wall_steal_s'))} "
+                f"| {r.get('speedup', 0):.2f}× |"
+            )
+    if execs:
+        print("\n### Multi-host execution "
+              "(contract_multihost, overlapped chunked all-reduce)\n")
+        print("| workload | slices | executed | padded | overlap | "
+              "max abs err | wall |")
+        print("|---|---|---|---|---|---|---|")
+        for r in execs:
+            print(
+                f"| {r.get('workload', '-')} "
+                f"| {r.get('n_slices', '-')} "
+                f"| {r.get('executed_slices', '-')} "
+                f"| {r.get('padded_slices', '-')} "
+                f"| {r.get('overlap_fraction', 0):.2f} "
+                f"| {r.get('max_abs_err', 0):.1e} "
+                f"| {fmt_s(r.get('wall_s'))} |"
+            )
+
+
 def print_obs_table(obs_dir="experiments/obs") -> None:
     """§Observability rows: tracer-overhead ablation (same compiled
     artifact, untraced vs traced wall) and the model-vs-measured
@@ -393,6 +444,7 @@ def main() -> None:
     print_optimize_table()
     print_megakernel_table()
     print_obs_table()
+    print_distributed_table()
 
 
 if __name__ == "__main__":

@@ -12,6 +12,7 @@ import traceback
 
 def main() -> None:
     from . import (
+        bench_distributed_scaling,
         bench_end_to_end,
         bench_flops_efficiency,
         bench_roofline,
@@ -29,6 +30,7 @@ def main() -> None:
         ("e2e", bench_end_to_end),
         ("sampling", bench_sampling_throughput),
         ("roofline", bench_roofline),
+        ("distributed", bench_distributed_scaling),
     ]
     print("name,us_per_call,derived")
     failures = 0

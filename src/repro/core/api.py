@@ -82,6 +82,13 @@ class PlanReport:
     # repro.obs.telemetry_summary(), populated only when tracing is on
     # (REPRO_TRACE=1 or the telemetry= toggle) — None otherwise
     telemetry: dict | None = None
+    # multi-host scheduling (PR 8): realized max/mean host load, ranges
+    # stolen across hosts, and the fraction of the reduction hidden
+    # behind slice compute — populated by contract_multihost when a
+    # report is threaded through; defaults describe a single-host run
+    schedule_imbalance: float = 0.0  # 0.0 = not a multi-host run
+    steal_count: int = 0
+    overlap_fraction: float = 0.0
 
     def row(self) -> str:
         row = (
@@ -117,6 +124,12 @@ class PlanReport:
             row += (
                 f" chains={self.fused_chains}"
                 f" chain_saved={_fmt_bytes(self.chain_hbm_bytes_saved)}"
+            )
+        if self.schedule_imbalance:
+            row += (
+                f" sched[imb={self.schedule_imbalance:.2f}"
+                f" steals={self.steal_count}"
+                f" overlap={self.overlap_fraction:.2f}]"
             )
         return row
 

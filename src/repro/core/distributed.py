@@ -23,6 +23,13 @@ Because subtasks are independent and enumerable, the slice axis is
 a lost device's slice range is re-executed elsewhere (work stealing at the
 granularity of slice ids), and a checkpoint is just the set of completed
 slice ids plus the partial sum (id-keyed, so a resume may re-chunk freely).
+
+This module is the *single-process* (device-level) layer.  Process-level
+parallelism — LPT work-stealing scheduling across hosts, the overlapped
+collective transport, and elastic per-host claims built on
+:class:`SliceRangeCheckpoint` — lives in :mod:`repro.distributed`
+(``contract_multihost``); both layers share the slice-id contract
+defined here, and every path is behavior-identical at world size 1.
 """
 
 from __future__ import annotations
@@ -93,8 +100,13 @@ def contract_sharded(
 
     hoist = default_hoist() if hoist is None else bool(hoist)
     hoist = hoist and plan.can_hoist
-    # invariant prologue: once per process, outside the slice loop
-    hoisted = plan.contract_prologue(arrays) if hoist else []
+    # invariant prologue: once per process, outside the slice loop — and
+    # device-put replicated over the mesh once per (leaf set, mesh), not
+    # once per call: the placed copies ride in the HoistCache entry, so
+    # repeated serving calls on a plan-cache hit skip the re-broadcast
+    hoisted = (
+        plan.contract_prologue_replicated(arrays, mesh) if hoist else []
+    )
 
     from jax.experimental.shard_map import shard_map
 
@@ -113,7 +125,7 @@ def contract_sharded(
                 jnp.asarray(ids), jnp.asarray(valid),
             )
             _trace.sync(out)
-        _record_sharded_metrics(plan, n_slices, total, hoist)
+        _record_sharded_metrics(plan, n_slices, total - n_slices, hoist)
         return out
 
     @jax.jit
@@ -167,24 +179,30 @@ def contract_sharded(
     return out
 
 
-def _record_sharded_metrics(plan, n_slices, total, hoist) -> None:
-    """Work accounting shared by both contract_sharded call sites (the
-    padded total here is a multiple of ndev*slice_batch, so the padding
-    waste differs from the single-host scan's)."""
-    _metrics.inc("exec.slices_executed", n_slices)
-    if total != n_slices:
-        _metrics.inc("exec.padded_slices", total - n_slices)
+def _record_sharded_metrics(plan, executed, padded, hoist) -> None:
+    """Work accounting shared by the sharded and multi-host call sites.
+
+    ``executed`` counts *real* slice ids summed into the amplitude;
+    ``padded`` counts masked lanes (wrapped-around ids whose contribution
+    a validity select zeroes out).  The two are disjoint by contract —
+    earlier revisions passed the padded total and inflated
+    ``exec.slices_executed`` whenever per-host batches were ragged, which
+    made multi-host FLOPs/chain accounting drift from the single-host
+    scan's on the same plan."""
+    _metrics.inc("exec.slices_executed", executed)
+    if padded:
+        _metrics.inc("exec.padded_slices", padded)
     if hoist:
         _metrics.inc(
-            "exec.flops_executed", plan.partition.per_slice_cost * n_slices
+            "exec.flops_executed", plan.partition.per_slice_cost * executed
         )
     else:
         _metrics.inc(
-            "exec.flops_executed", plan.executed_flops(n_slices, hoist=False)
+            "exec.flops_executed", plan.executed_flops(executed, hoist=False)
         )
     chains = plan._chain_dispatch.get("epilogue" if hoist else "naive")
     if chains:
-        _metrics.inc("exec.chain_calls", len(chains) * n_slices)
+        _metrics.inc("exec.chain_calls", len(chains) * executed)
 
 
 @dataclasses.dataclass

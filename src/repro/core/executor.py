@@ -573,8 +573,47 @@ class ContractionPlan:
             _trace.sync(out)
         _metrics.inc("exec.flops_executed", self.partition.invariant_cost)
         if key is not None:
-            self._hoist_cache.put(key, (out, keepalive))
+            # third slot: per-Mesh replicated device-put copies, filled
+            # lazily by contract_prologue_replicated on the sharded path
+            self._hoist_cache.put(key, (out, keepalive, {}))
         return out
+
+    def contract_prologue_replicated(
+        self, arrays, mesh, use_cache: bool = True
+    ):
+        """Prologue buffers device-put replicated over ``mesh`` — the
+        form ``contract_sharded`` captures into its shard_map worker.
+
+        The placed copies are cached *in the same HoistCache entry* as
+        the host-side prologue outputs, keyed by ``mesh``: repeated
+        sharded calls on a plan-cache hit reuse the already-broadcast
+        buffers instead of re-issuing the device_put every invocation
+        (``exec.hoist_replicated_reuse`` counts the skips,
+        ``exec.hoist_replicated_put`` the actual broadcasts)."""
+        if not self.can_hoist:
+            return []
+        out = self.contract_prologue(arrays, use_cache=use_cache)
+        entry = key = None
+        if use_cache and self._hoist_cache.maxsize > 0:
+            from ..lowering.cache import leaf_key  # lazy: cycle
+
+            key, _ = leaf_key(arrays, self.prologue_leaves)
+            entry = self._hoist_cache.get(key)
+            if entry is not None and len(entry) > 2:
+                placed = entry[2].get(mesh)
+                if placed is not None:
+                    _metrics.inc("exec.hoist_replicated_reuse")
+                    return placed
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sharding = NamedSharding(mesh, PartitionSpec())
+        placed = [jax.device_put(o, sharding) for o in out]
+        _metrics.inc("exec.hoist_replicated_put")
+        if entry is not None and len(entry) > 2:
+            entry[2][mesh] = placed
+            # re-put so the cache's byte accounting sees the new copies
+            self._hoist_cache.put(key, entry)
+        return placed
 
     # ------------------------------------------------------------------
     def contract_all(

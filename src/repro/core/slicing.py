@@ -436,3 +436,24 @@ def find_slices(
     elif mode != "width":
         raise ValueError(f"unknown slicing mode {mode!r}")
     return S
+
+
+def partition_slice_ids(
+    n_slices: int, n_parts: int
+) -> list[tuple[int, int]]:
+    """The paper's static process split: contiguous ``[start, end)``
+    runs of slice ids, near-equal in *count* (first ``n_slices mod
+    n_parts`` parts get one extra id).  This is the Sec. V-D baseline the
+    work-stealing scheduler (:mod:`repro.distributed`) is measured
+    against; empty parts (``n_parts > n_slices``) come back as empty
+    ranges so host indices stay aligned."""
+    if n_parts < 1:
+        raise ValueError("n_parts must be >= 1")
+    base, extra = divmod(int(n_slices), int(n_parts))
+    out = []
+    pos = 0
+    for p in range(n_parts):
+        take = base + (1 if p < extra else 0)
+        out.append((pos, pos + take))
+        pos += take
+    return out

@@ -193,10 +193,14 @@ class HoistCache(PlanCache):
 
     One instance lives on each :class:`~repro.core.executor.
     ContractionPlan` (the hoisted buffers are only meaningful for that
-    plan's partition); the stored value is ``(outputs, keepalive)`` —
-    the hoisted device arrays in ``partition.hoisted_nodes`` order plus
-    the key's keep-alive references, which must live exactly as long as
-    the entry so identity keys can never alias recycled buffers.
+    plan's partition); the stored value is ``(outputs, keepalive,
+    replicated)`` — the hoisted device arrays in
+    ``partition.hoisted_nodes`` order, the key's keep-alive references
+    (which must live exactly as long as the entry so identity keys can
+    never alias recycled buffers), and a per-``Mesh`` dict of the
+    replicated device-put copies ``contract_sharded`` broadcasts, so a
+    plan-cache hit reuses the already-placed buffers instead of
+    re-broadcasting them every invocation.
 
     Entries hold keep-alive references to *device buffers*, so eviction
     is what releases device memory: dropping the ``(outputs, keepalive)``
@@ -219,8 +223,12 @@ class HoistCache(PlanCache):
 
     @staticmethod
     def entry_nbytes(value) -> int:
-        outputs, _keepalive = value
-        return sum(int(getattr(a, "nbytes", 0)) for a in outputs)
+        outputs = value[0]
+        n = sum(int(getattr(a, "nbytes", 0)) for a in outputs)
+        if len(value) > 2:  # replicated per-mesh copies count too
+            for placed in value[2].values():
+                n += sum(int(getattr(a, "nbytes", 0)) for a in placed)
+        return n
 
     def put(self, key: str, value) -> None:
         nbytes = self.entry_nbytes(value)

@@ -12,7 +12,12 @@ claims — Sec. VI).  Three parts:
   * :mod:`repro.obs.metrics` — process-global named counters / gauges /
     histograms (plan-cache and HoistCache hits/misses/evicted bytes,
     slices executed, chains fused, executed FLOPs, ragged-padding
-    waste), snapshot-able as a dict and reset-able for tests.
+    waste; the multi-host scheduler adds per-host queue depth gauges
+    ``sched.queue_depth.h<h>``, the ``sched.steals`` counter, the
+    ``sched.steal_latency_s`` histogram — drain-to-claim latency of
+    each successful steal — and the elastic store's
+    ``elastic.ranges_completed`` / ``elastic.claims_reclaimed``),
+    snapshot-able as a dict and reset-able for tests.
   * :mod:`repro.obs.calibrate` — joins per-node measured wall against
     the refiner's modeled times and the lifetime planner's certified
     peaks into a model-vs-measured table per backend class — the

@@ -113,6 +113,30 @@ def oneshot_plan(
     return OneShot(tree, smask, width0)
 
 
+def per_slice_cost_vector(tree: ContractionTree, smask: int):
+    """Modeled FLOPs of each of the ``2^|S|`` slice subtasks — the cost
+    vector that seeds the multi-host scheduler's LPT queues
+    (:class:`repro.distributed.scheduler.SliceScheduler`).
+
+    Under the paper's cost model every subtask fixes its sliced indices
+    to one bit assignment of the *same* tree, so the modeled epilogue
+    cost is identical across slice ids: the vector is uniform at
+    :attr:`~repro.lowering.partition.TreePartition.per_slice_cost`
+    (Eq. 6 dependent cost / ``2^|S|``).  Raggedness — the reason dynamic
+    scheduling beats the paper's static split — enters from *outside*
+    the model: measured per-slice walls from the telemetry calibrator
+    (PR 7) or synthetic overlays in the scaling benchmark replace
+    entries of this vector; the scheduler only requires that every host
+    sees the same vector."""
+    import numpy as np
+
+    n_slices = 1 << popcount(smask)
+    if smask == 0:
+        return np.ones(1)
+    part = partition_tree(tree, smask)
+    return np.full(n_slices, float(part.per_slice_cost))
+
+
 # ----------------------------------------------------------------------
 # search state
 # ----------------------------------------------------------------------

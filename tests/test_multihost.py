@@ -1,0 +1,430 @@
+"""Multi-host slice parallelism: LPT + work-stealing scheduler, elastic
+claim store, atomic slice checkpoints, and the contract_multihost driver
+(world-size-1 invariance, emulated host failure + epoch resume, and a
+real 2-process ``jax.distributed`` gloo run)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import subprocess_kwargs
+from repro.checkpoint.manager import (
+    load_slice_checkpoint,
+    save_slice_checkpoint,
+)
+from repro.core import ContractionPlan, simplify_network
+from repro.core.distributed import SliceRangeCheckpoint
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices, partition_slice_ids
+from repro.distributed import (
+    ClaimStore,
+    LocalArbiter,
+    SliceRange,
+    SliceScheduler,
+    contract_multihost,
+    imbalance,
+    lpt_assignment,
+    make_ranges,
+    simulate,
+    uniform_assignment,
+)
+from repro.optimize.search import per_slice_cost_vector
+from repro.quantum.circuits import circuit_to_network, random_1d_circuit
+
+
+def _ragged_costs(n, heavy_every=8, heavy=7.0):
+    """Synthetic ragged per-slice costs: a heavy head region (the shape
+    that breaks a contiguous uniform split worst)."""
+    c = np.ones(n)
+    c[: n // heavy_every] = heavy
+    return c
+
+
+def _missing(n, chunk):
+    return SliceRangeCheckpoint(n, set(), 0.0).missing(chunk)
+
+
+# ----------------------------------------------------------------------
+# scheduler unit behavior
+# ----------------------------------------------------------------------
+class TestScheduler:
+    def test_lpt_deterministic_across_runs(self):
+        costs = _ragged_costs(64)
+        miss = _missing(64, 4)
+        for hosts in (1, 2, 3, 4, 7):
+            a = lpt_assignment(make_ranges(miss, costs), hosts)
+            b = lpt_assignment(make_ranges(miss, costs), hosts)
+            assert [[r.key() for r in q] for q in a] == [
+                [r.key() for r in q] for q in b
+            ]
+
+    def test_steal_order_deterministic(self):
+        costs = _ragged_costs(64)
+        for hosts in (2, 3, 4):
+            sims = []
+            for _ in range(2):
+                sched = SliceScheduler(
+                    _missing(64, 4), hosts, costs, seed=0
+                )
+                sims.append(
+                    simulate(sched, host_speed=[1.0] + [0.5] * (hosts - 1))
+                )
+            assert sims[0].steal_order == sims[1].steal_order
+            assert sims[0].executed == sims[1].executed
+            assert sims[0].makespan == sims[1].makespan
+
+    def test_lpt_beats_uniform_imbalance(self):
+        costs = _ragged_costs(96)
+        miss = _missing(96, 4)
+        ranges = make_ranges(miss, costs)
+        for hosts in (2, 4, 6):
+            lpt = imbalance(lpt_assignment(ranges, hosts))
+            uni = imbalance(uniform_assignment(ranges, hosts))
+            assert lpt <= uni + 1e-12
+            assert lpt < 1.2  # LPT is a 4/3-approximation
+        assert imbalance(uniform_assignment(ranges, 4)) > 1.5
+
+    def test_stealing_rebalances_heterogeneous_hosts(self):
+        # perfect cost model but one slow host: only stealing can help
+        costs = np.ones(64)
+        sched = SliceScheduler(_missing(64, 2), 2, costs)
+        res = simulate(sched, host_speed=[1.0, 0.25])
+        assert res.steal_count > 0
+        static = SliceScheduler(_missing(64, 2), 2, costs, policy="uniform")
+        # forbid stealing to model the static split
+        arb = LocalArbiter()
+        clock = [0.0, 0.0]
+        for h in (0, 1):
+            while True:
+                rng = static.next_range(h, arb, steal=False)
+                if rng is None:
+                    break
+                clock[h] += rng.cost / (1.0 if h == 0 else 0.25)
+        assert res.makespan < max(clock)
+
+    def test_all_work_executed_exactly_once(self):
+        costs = _ragged_costs(50)
+        sched = SliceScheduler(_missing(50, 3), 3, costs)
+        res = simulate(sched, host_speed=[1.0, 0.6, 0.3])
+        seen = sorted(r for host in res.executed for r in host)
+        assert seen == sorted(_missing(50, 3))
+
+    def test_uniform_partition_slice_ids(self):
+        assert partition_slice_ids(10, 4) == [
+            (0, 3), (3, 6), (6, 8), (8, 10)
+        ]
+        parts = partition_slice_ids(7, 9)
+        assert len(parts) == 9
+        assert sum(e - s for s, e in parts) == 7
+
+
+# ----------------------------------------------------------------------
+# atomic checkpoint persistence (satellite: temp + fsync + os.replace)
+# ----------------------------------------------------------------------
+class TestSliceCheckpointPersistence:
+    def test_roundtrip(self, tmp_path):
+        st = SliceRangeCheckpoint(32, {(0, 4), (10, 12)}, 0.0)
+        st.partial = st.partial + np.full((2,), 1 + 2j, np.complex64)
+        p = str(tmp_path / "host_0.npz")
+        save_slice_checkpoint(p, st)
+        back = load_slice_checkpoint(p)
+        assert back.n_slices == 32
+        assert back._intervals() == st._intervals()
+        np.testing.assert_array_equal(back.partial, st.partial)
+
+    def test_scalar_partial_roundtrip(self, tmp_path):
+        st = SliceRangeCheckpoint(8, set(), 0.0)
+        p = str(tmp_path / "s.npz")
+        save_slice_checkpoint(p, st)
+        assert load_slice_checkpoint(p).partial == 0.0
+
+    def test_replace_is_atomic_over_existing(self, tmp_path):
+        p = str(tmp_path / "host_0.npz")
+        good = SliceRangeCheckpoint(16, {(0, 8)}, 0.0)
+        save_slice_checkpoint(p, good)
+        # a crash mid-save leaves only a temp file; the published
+        # checkpoint must still load as the previous complete state
+        with open(p + ".tmp.999", "wb") as f:
+            f.write(b"truncated garbage")
+        back = load_slice_checkpoint(p)
+        assert back._intervals() == [(0, 8)]
+        # and a subsequent good save replaces cleanly
+        good.add_range(8, 16)
+        save_slice_checkpoint(p, good)
+        assert load_slice_checkpoint(p)._intervals() == [(0, 16)]
+        assert os.path.exists(p + ".tmp.999")  # untouched foreign tmp
+
+
+# ----------------------------------------------------------------------
+# elastic claim store
+# ----------------------------------------------------------------------
+class TestClaimStore:
+    def test_claim_exclusive_across_stores(self, tmp_path):
+        root = str(tmp_path)
+        s0 = ClaimStore(root, 16, host=0)
+        s1 = ClaimStore(root, 16, host=1)
+        r = SliceRange(0, 4, 4.0, 0)
+        assert s0.try_claim(r, 0)
+        assert not s1.try_claim(r, 1)  # O_EXCL: exactly one winner
+        assert s1.try_claim(SliceRange(4, 8, 4.0, 1), 1)
+
+    def test_merge_unions_hosts(self, tmp_path):
+        root = str(tmp_path)
+        s0 = ClaimStore(root, 16, host=0)
+        s1 = ClaimStore(root, 16, host=1)
+        s0.complete(SliceRange(0, 4, 4.0, 0), np.complex64(1 + 1j))
+        s1.complete(SliceRange(4, 8, 4.0, 1), np.complex64(2 - 1j))
+        m = ClaimStore(root, 16, host=2).merged()
+        assert m._intervals() == [(0, 8)]
+        assert m.partial == np.complex64(3 + 0j)
+        assert m.missing(8) == [(8, 16)]
+
+    def test_stale_claim_reclaim_is_epoch_gated(self, tmp_path):
+        root = str(tmp_path)
+        dead = ClaimStore(root, 16, host=1, epoch=0)
+        # dead host: one completed range, one claim taken to the grave
+        assert dead.try_claim(SliceRange(0, 4, 4.0, 1), 1)
+        dead.complete(SliceRange(0, 4, 4.0, 1), np.complex64(1j))
+        assert dead.try_claim(SliceRange(4, 8, 4.0, 1), 1)
+        # a same-epoch peer must NOT reclaim (owner may just be slow)
+        peer = ClaimStore(root, 16, host=0, epoch=0)
+        assert peer.reclaim_stale() == 0
+        assert not peer.try_claim(SliceRange(4, 8, 4.0, 0), 0)
+        # a bumped-epoch resume reclaims exactly the unfinished claim
+        resumed = ClaimStore(root, 16, host=0, epoch=1)
+        assert resumed.reclaim_stale() == 1
+        assert resumed.try_claim(SliceRange(4, 8, 4.0, 0), 0)
+        # the completed range's claim survives as a record
+        assert not resumed.try_claim(SliceRange(0, 4, 4.0, 0), 0)
+
+
+# ----------------------------------------------------------------------
+# driver: world-size-1 invariance + emulated multi-host + failure resume
+# ----------------------------------------------------------------------
+def _plan(nq=9, depth=6, seed=5, target=4):
+    c = random_1d_circuit(nq, depth, seed=seed)
+    tn, arrays = circuit_to_network(c, bitstring="0" * nq)
+    tn, arrays = simplify_network(tn, arrays)
+    tree = random_greedy_tree(tn, repeats=4)
+    S = find_slices(tree, target, method="lifetime")
+    return ContractionPlan(tree, S), arrays, tree
+
+
+class TestContractMultihost:
+    def test_world1_matches_contract_all(self):
+        plan, arrays, tree = _plan()
+        ref = np.asarray(plan.contract_all(arrays, slice_batch=4))
+        res = contract_multihost(plan, arrays, slice_batch=4)
+        np.testing.assert_allclose(res.value, ref, atol=1e-6)
+        assert res.complete
+        assert res.executed_slices == 1 << plan.num_sliced
+        assert res.steal_count == 0
+
+    def test_executed_vs_padded_accounting(self):
+        # ragged batches: executed counts real ids, padded the masked
+        # lanes — they must never be conflated (satellite fix)
+        import repro.obs as obs
+
+        plan, arrays, _ = _plan()
+        n = 1 << plan.num_sliced
+        sb = 3
+        assert n % sb != 0
+        obs.set_enabled(True)
+        try:
+            obs.reset()
+            res = contract_multihost(plan, arrays, slice_batch=sb)
+            snap = obs.telemetry_summary()["metrics"]
+        finally:
+            obs.set_enabled(False)
+            obs.reset()
+        assert res.executed_slices == n
+        n_ranges = len(res.executed_ranges)
+        assert res.padded_slices == n_ranges * sb - n
+        assert snap["counters"]["exec.slices_executed"] == n
+        assert snap["counters"]["exec.padded_slices"] == res.padded_slices
+
+    def test_emulated_two_hosts_file_transport(self, tmp_path):
+        plan, arrays, tree = _plan()
+        dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+        root = str(tmp_path / "run")
+        costs = per_slice_cost_vector(tree, plan.smask)
+        kw = dict(
+            slice_batch=2, costs=costs, transport="file",
+            checkpoint_dir=root, world_size=2,
+        )
+        r0 = contract_multihost(plan, arrays, rank=0, **kw)
+        # host 0 drained its queue then stole everything host 1 never ran
+        assert r0.steal_count > 0
+        assert r0.complete
+        np.testing.assert_allclose(r0.value, dense, atol=1e-4)
+        # host 1 arrives late: all claimed, nothing to do, same value
+        r1 = contract_multihost(plan, arrays, rank=1, **kw)
+        assert r1.executed_slices == 0
+        np.testing.assert_allclose(r1.value, dense, atol=1e-4)
+
+    def test_host_failure_and_epoch_resume(self, tmp_path):
+        plan, arrays, tree = _plan()
+        dense = np.asarray(ContractionPlan(tree, 0).contract_all(arrays))
+        root = str(tmp_path / "run")
+        kw = dict(
+            slice_batch=2, transport="file", checkpoint_dir=root,
+            world_size=2,
+        )
+        # host 1 executes one range, then dies holding its next claim
+        with pytest.raises(RuntimeError, match="simulated host 1"):
+            contract_multihost(plan, arrays, rank=1, fail_after=1, **kw)
+        # host 0 (same epoch) completes everything it can claim — the
+        # dead host's in-flight range stays claimed, so coverage has a
+        # hole and the run reports incomplete
+        r0 = contract_multihost(plan, arrays, rank=0, **kw)
+        assert not r0.complete
+        assert r0.state.missing(1)
+        # a bumped-epoch resume reclaims the stale claim, executes only
+        # the missing ids, and lands on the dense amplitude
+        r2 = contract_multihost(
+            plan, arrays, rank=0, slice_batch=2, transport="file",
+            checkpoint_dir=root, world_size=1, epoch=1,
+        )
+        assert r2.complete
+        missing_before = sum(e - s for s, e in r0.state.missing(1))
+        assert r2.executed_slices == missing_before
+        np.testing.assert_allclose(r2.value, dense, atol=1e-4)
+
+    def test_report_fields_populated(self):
+        from repro.core.api import plan_compiled
+
+        c = random_1d_circuit(9, 6, seed=5)
+        tn, arrs = circuit_to_network(c, bitstring="0" * 9)
+        tn, arrs = simplify_network(tn, arrs)
+        plan2, report = plan_compiled(tn, target_dim=4)
+        res = contract_multihost(plan2, arrs, slice_batch=2, report=report)
+        assert report.schedule_imbalance == res.schedule_imbalance > 0
+        assert report.steal_count == res.steal_count
+        assert "sched[" in report.row()
+
+
+# ----------------------------------------------------------------------
+# satellite: replicated hoisted-prologue reuse on the sharded path
+# ----------------------------------------------------------------------
+REPLICATED = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+import repro.obs as obs
+from repro.quantum.circuits import random_1d_circuit, circuit_to_network
+from repro.core import simplify_network, ContractionPlan
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+from repro.core.distributed import contract_sharded
+from repro.launch.mesh import make_host_mesh
+
+c = random_1d_circuit(10, 8, seed=3)
+tn, arrays = circuit_to_network(c, bitstring="0110100101")
+tn, arrays = simplify_network(tn, arrays)
+tree = random_greedy_tree(tn, repeats=4)
+S = find_slices(tree, 4, method="lifetime")
+plan = ContractionPlan(tree, S)
+assert plan.can_hoist
+mesh = make_host_mesh((8,), ("data",))
+arrays = [jax.numpy.asarray(a) for a in arrays]  # stable buffer identity
+obs.set_enabled(True)
+v1 = contract_sharded(plan, arrays, mesh, hoist=True)
+v2 = contract_sharded(plan, arrays, mesh, hoist=True)
+snap = obs.telemetry_summary()["metrics"]["counters"]
+assert np.allclose(np.asarray(v1), np.asarray(v2))
+# first call broadcasts once, second call reuses the placed buffers
+assert snap.get("exec.hoist_replicated_put", 0) == 1, snap
+assert snap.get("exec.hoist_replicated_reuse", 0) >= 1, snap
+print("DONE")
+"""
+
+
+def test_replicated_prologue_reuse_8dev():
+    r = subprocess.run(
+        [sys.executable, "-c", REPLICATED],
+        capture_output=True, text=True, timeout=900,
+        **subprocess_kwargs(),
+    )
+    assert "DONE" in r.stdout, r.stdout + "\n" + r.stderr[-3000:]
+
+
+# ----------------------------------------------------------------------
+# real 2-process jax.distributed run (gloo CPU collectives)
+# ----------------------------------------------------------------------
+MH_WORKER = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+pid = int(sys.argv[1]); port = sys.argv[2]
+os.environ["REPRO_COORDINATOR"] = "localhost:" + port
+os.environ["REPRO_NUM_PROCESSES"] = "2"
+os.environ["REPRO_PROCESS_ID"] = str(pid)
+import numpy as np
+from repro.distributed import init_multi_host, contract_multihost
+rank, size = init_multi_host()
+assert size == 2, size
+from repro.quantum.circuits import random_1d_circuit, circuit_to_network
+from repro.core import simplify_network, ContractionPlan
+from repro.core.pathfinder import random_greedy_tree
+from repro.core.slicing import find_slices
+
+c = random_1d_circuit(9, 6, seed=7)
+tn, arrays = circuit_to_network(c, bitstring="011010010")
+tn, arrays = simplify_network(tn, arrays)
+tree = random_greedy_tree(tn, repeats=4)
+S = find_slices(tree, 4, method="lifetime")
+plan = ContractionPlan(tree, S)
+single = np.asarray(
+    ContractionPlan(tree, S).contract_all(arrays, slice_batch=4)
+)
+res = contract_multihost(
+    plan, arrays, slice_batch=2, reduce_rounds=3, reduce_chunks=2
+)
+assert np.allclose(np.asarray(res.value), single, atol=1e-4), (
+    res.value, single
+)
+print("COVER" + json.dumps({
+    "rank": rank, "n_slices": res.n_slices,
+    "ranges": res.executed_ranges,
+}))
+print(f"rank={rank} MH_OK")
+"""
+
+
+def test_two_process_collective_matches_single():
+    """2 plain subprocesses, jax.distributed + gloo psum: the reduced
+    amplitude equals the single-process vmapped scan on every rank, and
+    the two ranks' slice-id coverage is an exact disjoint partition."""
+    import socket
+
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        port = str(s.getsockname()[1])
+    procs = [
+        subprocess.Popen(
+            [sys.executable, "-c", MH_WORKER, str(pid), port],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            **subprocess_kwargs(),
+        )
+        for pid in (0, 1)
+    ]
+    outs = []
+    for p in procs:
+        out, err = p.communicate(timeout=900)
+        outs.append((p.returncode, out, err))
+    for rc, out, err in outs:
+        assert rc == 0 and "MH_OK" in out, out + "\n" + err[-3000:]
+    cover = {}
+    n_slices = None
+    for _, out, _ in outs:
+        line = next(l for l in out.splitlines() if l.startswith("COVER"))
+        rec = json.loads(line[len("COVER"):])
+        cover[rec["rank"]] = rec["ranges"]
+        n_slices = rec["n_slices"]
+    ids0 = {i for s, e in cover[0] for i in range(s, e)}
+    ids1 = {i for s, e in cover[1] for i in range(s, e)}
+    assert ids0.isdisjoint(ids1)
+    assert ids0 | ids1 == set(range(n_slices))
