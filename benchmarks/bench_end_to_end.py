@@ -133,6 +133,124 @@ def megakernel_rows(
     ]
 
 
+def precision_rows(
+    circuit: str = "syc-12",
+    target_dim: int = 18,
+    fidelity_tol: float = 0.05,
+    trajectory_dir: str = "experiments/precision",
+) -> list[str]:
+    """Mixed-precision ablation on the pinned plan: the same network
+    planned at fp32 and under REPRO_PRECISION=auto semantics
+    (``precision="auto"`` at the given XEB budget), comparing modeled
+    two-phase time, modeled HBM traffic, slice count, bf16 step counts,
+    the measured contract_all wall, and the measured Linear-XEB delta on
+    the open-batch amplitudes — appended to the trajectory history
+    ``make_tables`` renders.
+
+    Pins ``REPRO_MEGAKERNEL=1`` / ``REPRO_FUSED_GEMM=1`` like the CI
+    gate: the ablation is about the precision dimension, not the other
+    lowering switches."""
+    from repro.core import plan_compiled, sample_bitstrings
+    from repro.quantum.xeb import xeb_from_amplitudes
+
+    from .common import CIRCUITS
+
+    tn, arrays = network_for(circuit)
+    circ = CIRCUITS[circuit]()
+    saved = {
+        k: os.environ.get(k) for k in ("REPRO_MEGAKERNEL", "REPRO_FUSED_GEMM")
+    }
+    os.environ["REPRO_MEGAKERNEL"] = "1"
+    os.environ["REPRO_FUSED_GEMM"] = "1"
+    stats, xebs = {}, {}
+    try:
+        for label, prec in (("fp32", "fp32"), ("auto", "auto")):
+            plan, report = plan_compiled(
+                tn, target_dim, backend="gemm", use_cache=False,
+                slicing_mode="peak", precision=prec,
+                fidelity_tol=fidelity_tol,
+            )
+            val, wall = timer(
+                lambda: np.asarray(plan.contract_all(arrays, slice_batch=8)),
+                repeat=2,
+            )
+            n_slices = 1 << plan.num_sliced
+            epi = sum(
+                plan.schedule.specs[k].modeled_time_s
+                for k in plan.epilogue_idx
+            ) * n_slices
+            stats[label] = {
+                "amp": complex(val),
+                "wall_s": wall,
+                "num_sliced": plan.num_sliced,
+                "modeled_time_s": report.modeled_time_hoisted_s,
+                "modeled_epilogue_s": epi,
+                "hbm_bytes": plan.schedule.hbm_traffic_bytes() * n_slices,
+                "peak_bytes": report.peak_bytes,
+                "precision_counts": plan.schedule.precision_counts(),
+                "predicted_amp_error": report.predicted_amp_error,
+            }
+            res = sample_bitstrings(
+                circ, num_samples=128,
+                open_qubits=tuple(range(circ.num_qubits - 4,
+                                        circ.num_qubits)),
+                target_dim=target_dim, seed=1, backend="gemm",
+                use_cache=False, slicing_mode="peak", slice_batch=4,
+                precision=prec, fidelity_tol=fidelity_tol,
+            )
+            xebs[label] = xeb_from_amplitudes(
+                circ.num_qubits, np.asarray(res.batch.amplitudes).ravel()
+            )
+    finally:
+        for k, v in saved.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    f32, aut = stats["fp32"], stats["auto"]
+    rel_err = abs(aut["amp"] - f32["amp"]) / abs(f32["amp"])
+    assert rel_err <= fidelity_tol, (
+        f"auto amplitude drifted {rel_err:.3g} > tol {fidelity_tol}"
+    )
+    record = {
+        "workload": circuit,
+        "fidelity_tol": fidelity_tol,
+        "fp32": {k: v for k, v in f32.items() if k != "amp"},
+        "auto": {k: v for k, v in aut.items() if k != "amp"},
+        "amp_rel_err": rel_err,
+        "xeb_fp32": xebs["fp32"],
+        "xeb_auto": xebs["auto"],
+        "xeb_delta": xebs["auto"] - xebs["fp32"],
+        "modeled_epilogue_speedup": (
+            f32["modeled_epilogue_s"] / aut["modeled_epilogue_s"]
+            if aut["modeled_epilogue_s"] else None
+        ),
+    }
+    append_trajectory([record], trajectory_dir)
+    rows = []
+    for label in ("fp32", "auto"):
+        s = stats[label]
+        counts = ";".join(
+            f"{k}:{v}" for k, v in sorted(s["precision_counts"].items())
+        )
+        rows.append(
+            f"e2e_precision_{label}_ms,{s['wall_s']*1e3:.1f},"
+            f"slices={s['num_sliced']};"
+            f"model_s={s['modeled_time_s']:.3e};"
+            f"epilogue_s={s['modeled_epilogue_s']:.3e};"
+            f"hbm_bytes={s['hbm_bytes']:.3e};"
+            f"counts={counts};"
+            f"xeb={xebs[label]:.4f}"
+        )
+    rows.append(
+        f"e2e_precision_delta,{rel_err:.3e},"
+        f"xeb_delta={record['xeb_delta']:.4f};"
+        f"epilogue_speedup={record['modeled_epilogue_speedup']:.2f};"
+        f"tol={fidelity_tol}"
+    )
+    return rows
+
+
 def telemetry_rows(
     circuits=("syc-12", "zn-12"),
     trajectory_dir: str = "experiments/obs",

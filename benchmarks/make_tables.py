@@ -388,6 +388,55 @@ def print_obs_table(obs_dir="experiments/obs") -> None:
             )
 
 
+def print_precision_table(precision_dir="experiments/precision") -> None:
+    """§Mixed precision rows: fp32 vs auto plan on the pinned workload —
+    modeled epilogue time, total HBM traffic, slice count, bf16 step
+    counts, and the measured Linear-XEB delta, one row pair per
+    trajectory record ``bench_end_to_end.precision_rows`` appends."""
+    path = os.path.join(precision_dir, "trajectory.json")
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows = rec.get("records", [])
+    rows = [r for r in rows if "xeb_delta" in r]
+    if not rows:
+        return
+    print("\n### Mixed precision under an XEB budget "
+          "(fp32 vs auto at fidelity_tol)\n")
+    print("| workload | tol | mode | slices | bf16 steps | "
+          "epilogue model | HBM bytes | wall | XEB | amp rel err |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        for mode in ("fp32", "auto"):
+            s = r.get(mode) or {}
+            counts = s.get("precision_counts") or {}
+            total = sum(counts.values())
+            xeb = r.get(f"xeb_{mode}")
+            rel_err = (
+                "" if mode == "fp32"
+                else f"{r.get('amp_rel_err', 0):.2e}"
+            )
+            print(
+                f"| {r.get('workload', '-') if mode == 'fp32' else ''} "
+                f"| {r.get('fidelity_tol', '-') if mode == 'fp32' else ''} "
+                f"| {mode} "
+                f"| {s.get('num_sliced', '-')} "
+                f"| {counts.get('bf16', 0)}/{total} "
+                f"| {fmt_s(s.get('modeled_epilogue_s'))} "
+                f"| {s.get('hbm_bytes', 0):.2e} "
+                f"| {fmt_s(s.get('wall_s'))} "
+                f"| {'-' if xeb is None else f'{xeb:.4f}'} "
+                f"| {rel_err} |"
+            )
+        print(
+            f"| | | Δ | | | "
+            f"{r.get('modeled_epilogue_speedup', 0):.2f}× faster | | | "
+            f"xeb Δ {r.get('xeb_delta', 0):+.4f} | |"
+        )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -444,6 +493,7 @@ def main() -> None:
     print_optimize_table()
     print_megakernel_table()
     print_obs_table()
+    print_precision_table()
     print_distributed_table()
 
 

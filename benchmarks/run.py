@@ -22,12 +22,16 @@ def main() -> None:
         bench_slicing_overhead,
     )
 
+    import types
+
+    precision = types.SimpleNamespace(run=bench_end_to_end.precision_rows)
     modules = [
         ("fig8", bench_slicefinder_speed),
         ("fig9", bench_slice_count),
         ("fig10", bench_slicing_overhead),
         ("fig11", bench_flops_efficiency),
         ("e2e", bench_end_to_end),
+        ("precision", precision),
         ("sampling", bench_sampling_throughput),
         ("roofline", bench_roofline),
         ("distributed", bench_distributed_scaling),

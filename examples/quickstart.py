@@ -104,6 +104,24 @@ def main() -> None:
         f"peak-aware |S| {rep.num_sliced}->{res_peak.report.num_sliced}"
     )
 
+    # mixed precision under an XEB budget: precision="auto" lets the
+    # planner demote MXU-sized GEMM steps to bf16-input/fp32-accumulate
+    # as long as the forward error model stays inside fidelity_tol.
+    # This 1-D circuit is too small to carry Pallas steps, so every step
+    # stays fp32 — the certified budget is reported either way.
+    res_mp = simulate_amplitude(
+        circuit, "1001011010", target_dim=5, backend=args.backend,
+        precision="auto", fidelity_tol=0.05, use_cache=False,
+    )
+    counts = res_mp.report.precision_counts or {}
+    print(
+        f"precision      : mode={res_mp.report.precision} "
+        f"tol={res_mp.report.fidelity_tol:g} "
+        f"steps={counts or '{}'} "
+        f"pred_amp_err={res_mp.report.predicted_amp_error:.2e}"
+    )
+    assert abs(complex(res_mp.value) - complex(result2.value)) < 1e-4
+
     # batch sampling: hold 3 output qubits open → one contraction yields
     # all 8 correlated amplitudes; draw bitstrings by frequency sampling
     samples = sample_bitstrings(

@@ -50,6 +50,8 @@ def main() -> None:
     ap.add_argument("--backend", choices=("einsum", "gemm"), default=None,
                     help="execution backend (default: $REPRO_BACKEND or "
                     "einsum)")
+    ap.add_argument("--fidelity-tol", type=float, default=0.05,
+                    help="XEB budget for the precision='auto' demo pass")
     args = ap.parse_args()
 
     from repro.core import default_backend
@@ -118,6 +120,30 @@ def main() -> None:
         f = xeb.linear_xeb(nq, np.asarray(probs))
         print(f"\nLinear XEB over {args.samples} random bitstrings: {f:+.4f} "
               "(random strings → ≈0; circuit-sampled strings → ≈1)")
+
+    # mixed precision under an XEB budget: re-run one amplitude with
+    # precision="auto" — MXU-sized GEMM steps demote to bf16-input/
+    # fp32-accumulate while the forward error model stays inside
+    # --fidelity-tol (needs the gemm backend and a plan large enough to
+    # carry Pallas steps, e.g. --rows 4 --cols 5 --cycles 12
+    # --target-dim 18; smaller plans certify at zero demotions).
+    bs0 = "0" * nq
+    r32 = simulate_amplitude(circ, bs0, target_dim=args.target_dim,
+                             backend=args.backend, use_cache=False)
+    rmp = simulate_amplitude(circ, bs0, target_dim=args.target_dim,
+                             backend=args.backend, precision="auto",
+                             fidelity_tol=args.fidelity_tol,
+                             use_cache=False)
+    counts = rmp.report.precision_counts or {}
+    scale = max(abs(complex(r32.value)), 1e-300)
+    rel = abs(complex(rmp.value) - complex(r32.value)) / scale
+    print(
+        f"\nmixed precision : mode={rmp.report.precision} "
+        f"tol={rmp.report.fidelity_tol:g} steps={counts or '{}'} "
+        f"pred_amp_err={rmp.report.predicted_amp_error:.2e} "
+        f"|S| {r32.report.num_sliced}->{rmp.report.num_sliced} "
+        f"rel_err={rel:.2e}"
+    )
 
     # the paper's batch-sampling workload: one contraction, 2^k correlated
     # amplitudes, num_samples frequency-sampled bitstrings

@@ -89,6 +89,11 @@ class PlanReport:
     schedule_imbalance: float = 0.0  # 0.0 = not a multi-host run
     steal_count: int = 0
     overlap_fraction: float = 0.0
+    # mixed precision under an XEB error budget (PR 9)
+    precision: str = "fp32"  # resolved mode: fp32 | bf16 | auto
+    fidelity_tol: float = 0.0  # the XEB budget the plan was certified at
+    precision_counts: dict | None = None  # GEMM-step counts per precision
+    predicted_amp_error: float = 0.0  # forward-model relative amp error
 
     def row(self) -> str:
         row = (
@@ -131,6 +136,15 @@ class PlanReport:
                 f" steals={self.steal_count}"
                 f" overlap={self.overlap_fraction:.2f}]"
             )
+        if self.precision != "fp32":
+            counts = self.precision_counts or {}
+            total = sum(counts.values())
+            row += (
+                f" prec={self.precision}"
+                f"[bf16={counts.get('bf16', 0)}/{total}"
+                f" tol={self.fidelity_tol:g}"
+                f" amp_err={self.predicted_amp_error:.2e}]"
+            )
         return row
 
 
@@ -165,6 +179,8 @@ def plan_contraction(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
 ):
     """Full planning pipeline on a tensor network.
 
@@ -201,6 +217,8 @@ def plan_contraction(
             merge=merge,
             repeats=repeats,
             slicing_mode=slicing_mode,
+            precision=precision,
+            fidelity_tol=fidelity_tol,
         )
         tree, smask = sr.tree, sr.smask
         width0 = sr.width_before  # raw greedy seed width, as in oneshot
@@ -210,6 +228,7 @@ def plan_contraction(
             tn, target_dim, method=method, tune=tune, merge=merge,
             repeats=repeats, seed=seed, slicing_mode=slicing_mode,
             itemsize=itemsize, budget_bytes=budget_bytes,
+            precision=precision, fidelity_tol=fidelity_tol,
         )
         tree, smask, width0 = shot.tree, shot.smask, shot.width_before
     else:
@@ -271,10 +290,21 @@ def plan_compiled(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
     telemetry: bool | None = None,
 ) -> tuple[ContractionPlan, PlanReport]:
     """Plan + lower a network into an executable :class:`ContractionPlan`,
     consulting the compiled-plan cache.
+
+    ``precision`` (``None`` follows ``REPRO_PRECISION``, default
+    ``"fp32"``) selects mixed-precision lowering: ``"auto"`` demotes MXU
+    GEMM steps to bf16-input/fp32-accumulate while the forward error
+    model keeps the predicted Linear-XEB fidelity loss within
+    ``fidelity_tol`` (``None`` → the 0.05 default); ``"bf16"`` forces
+    every eligible step.  The resolved mode and (for non-fp32 modes) the
+    tolerance join the plan fingerprint, so plans at different budgets
+    never alias; fp32 plans ignore the tolerance and share one entry.
 
     ``telemetry=True`` forces span tracing + metrics on for this call
     (``False`` forces off, ``None`` follows ``REPRO_TRACE``); when
@@ -308,7 +338,8 @@ def plan_compiled(
             use_cache=use_cache, slicing_mode=slicing_mode,
             optimize=optimize, search_evals=search_evals,
             search_workers=search_workers, search_wall_s=search_wall_s,
-            budget_bytes=budget_bytes,
+            budget_bytes=budget_bytes, precision=precision,
+            fidelity_tol=fidelity_tol,
         )
         if _trace.enabled():
             report = dataclasses.replace(
@@ -334,14 +365,27 @@ def _plan_compiled(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
 ) -> tuple[ContractionPlan, PlanReport]:
     from ..lowering.cache import PLAN_CACHE, PlanEntry, network_fingerprint
+    from ..lowering.precision import (
+        DEFAULT_FIDELITY_TOL,
+        PRECISION_MODES,
+        default_precision,
+    )
     from ..lowering.refiner import default_fused, default_megakernel
 
     import jax.numpy as jnp
 
     backend = backend if backend is not None else default_backend()
     dtype = jnp.dtype(dtype if dtype is not None else jnp.complex64)
+    precision_mode = precision if precision is not None else default_precision()
+    if precision_mode not in PRECISION_MODES:
+        raise ValueError(
+            f"precision {precision_mode!r} not in {PRECISION_MODES}"
+        )
+    tol = DEFAULT_FIDELITY_TOL if fidelity_tol is None else float(fidelity_tol)
     t0 = time.perf_counter()
     key = None
     if use_cache:
@@ -357,12 +401,17 @@ def _plan_compiled(
         )
         # REPRO_MEGAKERNEL changes the plan's chain dispatch the same way
         # REPRO_FUSED_GEMM changes its schedule — both join the key
+        # the resolved precision mode always joins the key; the fidelity
+        # tolerance only matters off fp32, so fp32 plans at different
+        # tolerances share one entry instead of fragmenting the cache
         key = network_fingerprint(
             tn,
             dtype,
             extra=(backend, target_dim, method, tune, merge, repeats, seed,
                    slicing_mode, default_fused(), default_megakernel(),
-                   optimize, budget_bytes, search_key),
+                   optimize, budget_bytes, search_key,
+                   precision_mode,
+                   tol if precision_mode != "fp32" else None),
         )
         ent = PLAN_CACHE.get(key)
         if ent is not None:
@@ -394,10 +443,17 @@ def _plan_compiled(
         itemsize=dtype.itemsize, optimize=optimize,
         search_evals=search_evals, search_workers=search_workers,
         search_wall_s=search_wall_s, budget_bytes=budget_bytes,
+        precision=precision_mode, fidelity_tol=tol,
     )
     with _trace.span("plan.lower", cat="plan", backend=backend):
-        plan = ContractionPlan(tree, smask, backend=backend, dtype=dtype)
+        plan = ContractionPlan(
+            tree, smask, backend=backend, dtype=dtype,
+            precision=precision_mode, fidelity_tol=tol,
+        )
     report.backend = plan.backend
+    report.precision = plan.precision_mode
+    if plan.precision_mode != "fp32":
+        report.fidelity_tol = plan.fidelity_tol
     # re-derive the two-phase metrics from the plan's own partition so the
     # report always describes the object that will execute (the memory
     # fields were already computed by plan_contraction with this dtype's
@@ -422,6 +478,16 @@ def _plan_compiled(
         report.transpose_bytes_saved = (
             plan.schedule.transpose_bytes_eliminated()
         )
+        report.precision_counts = plan.schedule.precision_counts()
+        report.predicted_amp_error = plan.schedule.predicted_amp_error
+        if plan._itemsize_of:
+            # bf16-stored intermediates shrink the true live-set peak —
+            # re-derive the memory fields from the plan's own dtype-true
+            # memory plan (plan_contraction counted fp32 storage)
+            mem = plan.memory_plan()
+            report.peak_bytes = mem.peak_bytes
+            report.peak_bytes_hoisted = mem.peak_bytes_hoisted
+            report.buffer_slots = mem.buffer_slots
     if plan.chain_plan is not None:
         report.fused_chains = plan.chain_plan.num_multi
         # per-slice saving in the mode that will execute: under hoisting
@@ -484,6 +550,8 @@ def simulate_amplitude(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
     telemetry: bool | None = None,
 ) -> SimulationResult:
     """Amplitude <bitstring|C|0…0> via the full planner + executor stack.
@@ -519,6 +587,8 @@ def simulate_amplitude(
             search_workers=search_workers,
             search_wall_s=search_wall_s,
             budget_bytes=budget_bytes,
+            precision=precision,
+            fidelity_tol=fidelity_tol,
         )
         sb = auto_slice_batch(slice_batch, 1 << plan.num_sliced)
         value = plan.contract_all(arrays, slice_batch=sb, hoist=hoist)
@@ -560,6 +630,8 @@ def sample_bitstrings(
     search_workers: int = 4,
     search_wall_s: float | None = None,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
     telemetry: bool | None = None,
 ):
     """Draw correlated bitstring samples from one batched contraction —
@@ -638,6 +710,8 @@ def sample_bitstrings(
             search_workers=search_workers,
             search_wall_s=search_wall_s,
             budget_bytes=budget_bytes,
+            precision=precision,
+            fidelity_tol=fidelity_tol,
         )
         amps = batch_mod.contract_amplitude_batch(
             plan, arrays, slice_batch=slice_batch, mesh=mesh,

@@ -195,6 +195,15 @@ class ContractionPlan:
     schedule``); ``backend=None`` resolves via :func:`default_backend`.
     ``dtype`` only informs the refiner's cost model / backend choice —
     execution adapts to the concrete arrays it is handed.
+
+    ``precision`` (``None`` → :func:`~repro.lowering.precision.
+    default_precision`, i.e. ``REPRO_PRECISION``) selects the
+    mixed-precision mode for the lowered schedule: ``"auto"`` demotes
+    MXU steps to bf16-input/fp32-accumulate while the forward error
+    model's predicted Linear-XEB fidelity loss stays within
+    ``fidelity_tol``; ``"bf16"`` forces every eligible step; ``"fp32"``
+    (the default) leaves the plan untouched.  Only meaningful for
+    ``backend="gemm"``.
     """
 
     def __init__(
@@ -203,6 +212,8 @@ class ContractionPlan:
         smask: int = 0,
         backend: str | None = None,
         dtype=jnp.complex64,
+        precision: str | None = None,
+        fidelity_tol: float | None = None,
     ):
         self.tree = tree
         tn = tree.tn
@@ -249,6 +260,23 @@ class ContractionPlan:
         if self.backend not in BACKENDS:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
         self.dtype = jnp.dtype(dtype)
+        from ..lowering.precision import (  # lazy: avoid cycle
+            DEFAULT_FIDELITY_TOL,
+            PRECISION_MODES,
+            default_precision,
+        )
+
+        self.precision_mode = (
+            precision if precision is not None else default_precision()
+        )
+        if self.precision_mode not in PRECISION_MODES:
+            raise ValueError(
+                f"precision {self.precision_mode!r} not in {PRECISION_MODES}"
+            )
+        self.fidelity_tol = (
+            DEFAULT_FIDELITY_TOL if fidelity_tol is None
+            else float(fidelity_tol)
+        )
         self.schedule = None
         if self.backend == "gemm":
             from ..lowering import refine_schedule  # lazy: avoid cycle
@@ -278,6 +306,33 @@ class ContractionPlan:
             self.hoisted_nodes = part.hoisted_nodes
             self.prologue_leaves = part.prologue_leaves
             self.epilogue_leaves = part.epilogue_leaves
+        # mixed-precision assignment: runs after the partition (epilogue
+        # steps weigh 2^|S| in the greedy order) and before the memory/
+        # chain planning (their byte accounting must see the storage
+        # precision the schedule will actually run at)
+        self._itemsize_of: dict[int, int] | None = None
+        if self.schedule is not None and self.precision_mode != "fp32":
+            from ..lowering.precision import (  # lazy: avoid cycle
+                assign_precision,
+                storage_itemsizes,
+            )
+
+            self.schedule = assign_precision(
+                self.schedule,
+                mode=self.precision_mode,
+                fidelity_tol=self.fidelity_tol,
+                epilogue_positions=(
+                    self.epilogue_idx if self.num_sliced else None
+                ),
+                n_slices=1 << self.num_sliced,
+            )
+            if self.schedule.precision_counts().get("bf16"):
+                self._itemsize_of = storage_itemsizes(
+                    [(s.lhs, s.rhs, s.out) for s in self.steps],
+                    self.schedule.specs,
+                    self.dtype,
+                    tree.emask,
+                )
         # lifetime-based buffer plan (lazy; built eagerly below when the
         # fusion-boundary pass needs the per-node buffer sizes)
         self._memory_plan = None
@@ -306,7 +361,8 @@ class ContractionPlan:
                     (s.lhs, s.rhs, s.out) for s in self.steps
                 )
                 self.chain_plan = plan_chains(
-                    self.schedule, step_nodes, segments, mem.naive.nbytes
+                    self.schedule, step_nodes, segments, mem.naive.nbytes,
+                    itemsize_of=self._itemsize_of,
                 )
                 self._chain_dispatch = {
                     name: self.chain_plan.by_segment(name)
@@ -412,7 +468,7 @@ class ContractionPlan:
 
             self._memory_plan = plan_memory(
                 self.tree, self.smask, itemsize=self.dtype.itemsize,
-                part=self.partition,
+                part=self.partition, itemsize_of=self._itemsize_of,
             )
         return self._memory_plan
 

@@ -268,10 +268,17 @@ def refine_slices_for_peak(
     target_dim: int,
     itemsize: int = 8,
     budget_bytes: int | None = None,
+    itemsize_of: dict[int, int] | None = None,
 ) -> int:
     """Shrink (or, for a hard explicit budget, grow) a slicing mask so
     the *planned live-set peak* — not the width proxy — meets the byte
     budget.
+
+    ``itemsize_of`` (per-node storage itemsizes from the precision
+    planner) makes the certified peak dtype-true under a mixed-precision
+    plan: bf16-stored nodes count half bytes, so re-certifying an
+    fp32-derived mask against the *same* budget can only prune further —
+    peak-mode slicing under bf16 finds a never-larger ``|S|``.
 
     The *certified* peak is the worst case over both execution modes:
     the naive full-tree subtask and the two-phase hoisted pair
@@ -301,7 +308,7 @@ def refine_slices_for_peak(
     from ..lowering.memory import certified_peak as _peak  # lazy: cycle
 
     def certified_peak(mask: int) -> int:
-        return _peak(tree, mask, itemsize)
+        return _peak(tree, mask, itemsize, itemsize_of=itemsize_of)
 
     if budget_bytes is None:
         budget_bytes = max(

@@ -279,7 +279,8 @@ def fused_transpose_matmul(
 # persistent kernel — chain intermediates live in VMEM scratch slots
 # assigned by the lifetime planner's linear scan, never touching HBM
 # ----------------------------------------------------------------------
-def _chain_step_math(a, b, form, *, unroll_batch: bool):
+def _chain_step_math(a, b, form, *, unroll_batch: bool,
+                     precision: str = "fp32"):
     """One chained step on VMEM-resident values, in tree-native
     transpose-GEMM form.
 
@@ -291,11 +292,20 @@ def _chain_step_math(a, b, form, *, unroll_batch: bool):
     makes the megakernel bitwise-reproducible against the unfused chain;
     ``False`` uses one batched ``dot_general`` (the off-TPU reference
     dataflow).  Returns the step output permuted to the executor's
-    ``inds_out`` order — the native layout of the next step's operand."""
+    ``inds_out`` order — the native layout of the next step's operand.
+
+    ``precision="bf16"`` rounds the GEMM inputs to bf16 (fp32
+    accumulation).  Incoming components are first widened to fp32 — an
+    exact no-op for bf16-stored carries — so the Karatsuba sums always
+    run in fp32 before the single rounding at the MXU boundary, matching
+    the unfused backends' cast placement exactly."""
 
     def gemm(x, y):
         xa = jnp.transpose(x, form.perm_a).reshape(form.B, form.M, form.K)
         yb = jnp.transpose(y, form.perm_b).reshape(form.B, form.K, form.N)
+        if precision == "bf16":
+            xa = xa.astype(jnp.bfloat16)
+            yb = yb.astype(jnp.bfloat16)
         if unroll_batch or form.B == 1:
             out = jnp.stack(
                 [
@@ -318,36 +328,54 @@ def _chain_step_math(a, b, form, *, unroll_batch: bool):
         return out
 
     if isinstance(a, tuple):
-        (ar, ai), (br, bi) = a, b
+        ar, ai = (c.astype(jnp.float32) for c in a)
+        br, bi = (c.astype(jnp.float32) for c in b)
         p1 = gemm(ar, br)
         p2 = gemm(ai, bi)
         p3 = gemm(ar + ai, br + bi)
         return (p1 - p2, p3 - p1 - p2)
-    return gemm(a, b)
+    return gemm(a.astype(jnp.float32), b.astype(jnp.float32))
 
 
 def _run_chain(read_ext, forms, carry_side, *, ncomp, unroll_batch,
-               store_carry=None):
+               store_carry=None, precisions=None):
     """Shared chain dataflow: the kernel body and the off-TPU reference
     both walk this exact sequence, so they agree step for step.
     ``store_carry(t, comps)`` routes an interior carry through its VMEM
-    scratch slot (kernel) or passes it through (reference)."""
+    scratch slot (kernel) or passes it through (reference).
+
+    ``precisions[t]`` is step ``t``'s GEMM input precision.  An interior
+    carry is rounded to its *consumer's* precision before being stored
+    (kernel) or carried (reference) — the chain-interior intermediate
+    lives at the planned precision, and because the consumer would round
+    it identically at the MXU boundary anyway, kernel and reference stay
+    bitwise-identical regardless of the scratch slot's physical dtype."""
     carry = None
     for t, form in enumerate(forms):
+        prec = precisions[t] if precisions is not None else "fp32"
         if t == 0:
             a, b = read_ext(), read_ext()
         else:
             ext = read_ext()
             a, b = (carry, ext) if carry_side[t] == "l" else (ext, carry)
-        val = _chain_step_math(a, b, form, unroll_batch=unroll_batch)
+        val = _chain_step_math(
+            a, b, form, unroll_batch=unroll_batch, precision=prec
+        )
         comps = val if ncomp == 2 else (val,)
-        if t + 1 < len(forms) and store_carry is not None:
-            comps = store_carry(t, comps)
+        if t + 1 < len(forms):
+            next_prec = (
+                precisions[t + 1] if precisions is not None else "fp32"
+            )
+            if next_prec == "bf16":
+                comps = tuple(c.astype(jnp.bfloat16) for c in comps)
+            if store_carry is not None:
+                comps = store_carry(t, comps)
         carry = comps if ncomp == 2 else comps[0]
     return carry if ncomp == 2 else (carry,)
 
 
-def _chain_kernel(*refs, forms, carry_side, slot_ids, ncomp, n_ext):
+def _chain_kernel(*refs, forms, carry_side, slot_ids, ncomp, n_ext,
+                  precisions=None):
     ext_refs = refs[:n_ext * ncomp]
     out_refs = refs[n_ext * ncomp:n_ext * ncomp + ncomp]
     scratch = refs[n_ext * ncomp + ncomp:]
@@ -364,19 +392,20 @@ def _chain_kernel(*refs, forms, carry_side, slot_ids, ncomp, n_ext):
         # the carry's shape: the intermediate lives only in this VMEM
         # scratch buffer — the HBM round-trip of the unfused path never
         # happens.  Slot reuse across steps (ping-pong) is exactly the
-        # linear-scan assignment certified at plan time.
+        # linear-scan assignment certified at plan time.  A bf16-rounded
+        # carry stored in a wider (shared) fp32 slot is held exactly.
         sid = slot_ids[t]
         stored = []
         for c, v in enumerate(comps):
             ref = scratch[sid * ncomp + c]
-            flat = v.reshape(-1)
+            flat = v.astype(ref.dtype).reshape(-1)
             ref[0:flat.size] = flat
             stored.append(ref[0:flat.size].reshape(v.shape))
         return tuple(stored)
 
     outs = _run_chain(
         read_ext, forms, carry_side, ncomp=ncomp, unroll_batch=True,
-        store_carry=store_carry,
+        store_carry=store_carry, precisions=precisions,
     )
     for c in range(ncomp):
         out_refs[c][...] = outs[c]
@@ -386,7 +415,7 @@ def _chain_kernel(*refs, forms, carry_side, slot_ids, ncomp, n_ext):
     jax.jit,
     static_argnames=(
         "forms", "carry_side", "slot_ids", "slot_elems", "complex_mode",
-        "interpret",
+        "interpret", "precisions", "slot_prec",
     ),
 )
 def fused_chain_matmul(
@@ -397,6 +426,8 @@ def fused_chain_matmul(
     slot_elems: tuple[int, ...],
     complex_mode: bool = False,
     interpret: bool = False,
+    precisions: tuple[str, ...] | None = None,
+    slot_prec: tuple[str, ...] | None = None,
 ):
     """Persistent megakernel for a run of adjacent tree GEMMs.
 
@@ -419,11 +450,26 @@ def fused_chain_matmul(
     output is written back — zero HBM round-trips between chained steps.
     Returns a tuple of ``ncomp`` fp32 arrays in the executor's
     ``inds_out`` order of the last step.
+
+    ``precisions[t]`` is step ``t``'s GEMM input precision ("fp32" /
+    "bf16"-input-fp32-accumulate); ``slot_prec`` gives each scratch
+    slot's physical dtype — "bf16" (half the VMEM bytes) when every
+    intermediate assigned to the slot is consumed at bf16.  Both default
+    to all-fp32.
     """
     ncomp = 2 if complex_mode else 1
     n_ext = len(forms) + 1
     assert len(operands) == n_ext * ncomp, (len(operands), n_ext, ncomp)
     assert len(slot_ids) == len(forms) - 1, (slot_ids, len(forms))
+    if precisions is not None:
+        assert len(precisions) == len(forms), (precisions, len(forms))
+    slot_dtypes = tuple(
+        jnp.bfloat16
+        if slot_prec is not None and i < len(slot_prec)
+        and slot_prec[i] == "bf16"
+        else jnp.float32
+        for i in range(len(slot_elems))
+    )
     f = forms[-1]
     natural = f.batch_shape + f.m_shape + f.n_shape
     oshape = tuple(natural[p] for p in f.out_perm)
@@ -435,13 +481,14 @@ def fused_chain_matmul(
             slot_ids=slot_ids,
             ncomp=ncomp,
             n_ext=n_ext,
+            precisions=precisions,
         ),
         out_shape=tuple(
             jax.ShapeDtypeStruct(oshape, jnp.float32) for _ in range(ncomp)
         ),
         scratch_shapes=[
-            pltpu.VMEM((e,), jnp.float32)
-            for e in slot_elems
+            pltpu.VMEM((e,), dt)
+            for e, dt in zip(slot_elems, slot_dtypes)
             for _ in range(ncomp)
         ],
         interpret=interpret,
@@ -455,13 +502,15 @@ def chain_reference(
     forms: tuple,
     carry_side: tuple[str, ...],
     complex_mode: bool = False,
+    precisions: tuple[str, ...] | None = None,
 ):
     """The megakernel's dataflow in plain jnp — same externals, same
-    per-step Karatsuba on split fp32 components, same step order — used
-    off-TPU where interpret-mode Pallas would be pure-Python slow.  Batch
-    cells run as one batched ``dot_general`` (XLA fuses the whole chain
-    into one program); agreement with the kernel is to fp32 tolerance,
-    and exact when every step has ``B == 1``."""
+    per-step Karatsuba on split fp32 components, same step order, same
+    interior-carry precision rounding — used off-TPU where
+    interpret-mode Pallas would be pure-Python slow.  Batch cells run as
+    one batched ``dot_general`` (XLA fuses the whole chain into one
+    program); agreement with the kernel is to fp32 tolerance, and exact
+    when every step has ``B == 1``."""
     ncomp = 2 if complex_mode else 1
     cursor = [0]
 
@@ -473,4 +522,5 @@ def chain_reference(
 
     return _run_chain(
         read_ext, forms, carry_side, ncomp=ncomp, unroll_batch=False,
+        precisions=precisions,
     )

@@ -49,19 +49,25 @@ def matmul(
     bk: int = 128,
     interpret: bool | None = None,
     min_kernel_dim: int = 128,
+    precision: str = "fp32",
 ) -> jax.Array:
     """GEMM via the Pallas kernel, with padding and complex support.
 
     Falls back to jnp.dot for tiny shapes where tile padding would dominate
     (the paper's Sec. V-A pathology — better to merge branches than to run
     a 128×4 GEMM on the MXU).
+
+    ``precision="bf16"`` rounds the (real-component) operands to bf16
+    before the kernel; the MXU accumulates in fp32 and the output stays
+    fp32.  Complex Karatsuba sums its component pairs in fp32 *before*
+    the rounding, so the fused/chained paths can match bitwise.
     """
     if interpret is None:
         interpret = default_interpret()
     if jnp.iscomplexobj(a) or jnp.iscomplexobj(b):
         return _complex_matmul(
             a, b, bm=bm, bn=bn, bk=bk, interpret=interpret,
-            min_kernel_dim=min_kernel_dim,
+            min_kernel_dim=min_kernel_dim, precision=precision,
         )
     m, k = a.shape
     _, n = b.shape
@@ -69,6 +75,9 @@ def matmul(
         return ref.matmul_ref(a, b)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
+    if precision == "bf16":
+        ap = ap.astype(jnp.bfloat16)
+        bp = bp.astype(jnp.bfloat16)
     # host-side XLA-profile annotation only (repro.obs.trace.annotate is
     # a no-op unless REPRO_TRACE=1, and never touches the traced graph)
     with _trace.annotate("ops.matmul"):
@@ -106,6 +115,7 @@ def fused_matmul(
     bn: int = 256,
     bk: int = 256,
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Fused transpose-GEMM over tree-native operand layouts, with complex
     support (the same 3-real-GEMM Karatsuba as :func:`matmul` — real/imag
@@ -113,6 +123,10 @@ def fused_matmul(
     components also stay in native layout; no transposed copy ever lands
     in HBM).  Returns the natural (batch..., m..., n...) output, one axis
     per role index.
+
+    ``precision="bf16"`` rounds each real component to bf16 before the
+    kernel (the in-kernel permutation commutes with the elementwise
+    cast); accumulation and output stay fp32.
 
     Rank-0 operands / scalar outputs fall back to the materialized
     permute + ``jnp.matmul`` reference — Pallas wants at least one output
@@ -126,7 +140,8 @@ def fused_matmul(
         br = jnp.real(b).astype(jnp.float32)
         bi = jnp.imag(b).astype(jnp.float32)
         kw = dict(perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
-                  bm=bm, bn=bn, bk=bk, interpret=interpret)
+                  bm=bm, bn=bn, bk=bk, interpret=interpret,
+                  precision=precision)
         p1 = fused_matmul(ar, br, **kw)
         p2 = fused_matmul(ai, bi, **kw)
         p3 = fused_matmul(ar + ai, br + bi, **kw)
@@ -143,6 +158,9 @@ def fused_matmul(
         a2 = jnp.transpose(a, perm_a).reshape(B, M, K)
         b2 = jnp.transpose(b, perm_b).reshape(B, K, N)
         return jnp.matmul(a2, b2).reshape(batch_shape + m_shape + n_shape)
+    if precision == "bf16":
+        a = a.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
     with _trace.annotate("ops.fused_matmul"):
         return fused_transpose_matmul(
             a, b, perm_a=perm_a, perm_b=perm_b, nb=nb, nm=nm, nn=nn, nk=nk,
@@ -159,6 +177,8 @@ def fused_chain(
     slot_elems: tuple[int, ...],
     interpret: bool | None = None,
     use_kernel: bool | None = None,
+    precisions: tuple[str, ...] | None = None,
+    slot_prec: tuple[str, ...] | None = None,
 ):
     """Execute a fused GEMM chain (see :class:`repro.lowering.refiner.
     FusedChainSpec`): a run of adjacent tree contractions as one call,
@@ -176,6 +196,11 @@ def fused_chain(
     the fusion this path exists to measure.  ``use_kernel`` forces the
     choice (the conformance suite exercises the kernel body explicitly
     with ``use_kernel=True, interpret=True``).
+
+    ``precisions[t]`` is step ``t``'s GEMM input precision; interior
+    carries are rounded to their consumer's precision and held in VMEM
+    at the planned slot dtype (``slot_prec``) — kernel and reference
+    apply identical rounding, so they remain bitwise-comparable.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -193,12 +218,16 @@ def fused_chain(
     kw = dict(
         forms=tuple(forms), carry_side=tuple(carry_side),
         complex_mode=complex_mode,
+        precisions=tuple(precisions) if precisions is not None else None,
     )
     with _trace.annotate("ops.fused_chain"):
         if use_kernel:
             out = fused_chain_matmul(
                 *comps, slot_ids=tuple(slot_ids),
-                slot_elems=tuple(slot_elems), interpret=interpret, **kw,
+                slot_elems=tuple(slot_elems), interpret=interpret,
+                slot_prec=tuple(slot_prec) if slot_prec is not None
+                else None,
+                **kw,
             )
         else:
             out = chain_reference(comps, **kw)

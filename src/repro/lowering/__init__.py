@@ -26,6 +26,12 @@ port of that bridge between the planner and the kernels:
               segment (naive / prologue / epilogue), deterministic free
               schedules and donation hints; feeds PlanReport and the
               peak-aware slicer mode
+  precision — mixed-precision planner: per-node bf16-input/fp32-
+              accumulate demotion under a forward amplitude-error model
+              certified against a Linear-XEB fidelity tolerance
+              (REPRO_PRECISION / fidelity_tol), plus the per-node
+              storage-itemsize maps that make the memory planner and
+              peak-aware slicer dtype-true
 
 Sunway→TPU mapping of the refiner, for the record: SWTT 8×8 fused-GEMM
 kernel quantization → MXU 128×128 tile quantization; LDM residency →
@@ -53,6 +59,15 @@ from .memory import (  # noqa: F401
     plan_memory,
 )
 from .partition import TreePartition, partition_tree  # noqa: F401
+from .precision import (  # noqa: F401
+    DEFAULT_FIDELITY_TOL,
+    PRECISION_MODES,
+    assign_precision,
+    default_precision,
+    node_amp_error,
+    storage_itemsizes,
+    tree_storage_itemsizes,
+)
 from .refiner import (  # noqa: F401
     CHAIN_VMEM_BUDGET_BYTES,
     ChainPlan,

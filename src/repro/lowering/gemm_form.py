@@ -182,6 +182,7 @@ def apply(spec, a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
             nn=len(form.n_inds), nk=len(form.k_inds),
             bm=spec.bm, bn=spec.bn, bk=spec.bk,
             interpret=interpret,
+            precision=getattr(spec, "precision", "fp32"),
         )
     else:
         a2 = jnp.transpose(a, form.perm_a).reshape(form.B, form.M, form.K)
@@ -203,6 +204,7 @@ def apply(spec, a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
                 bk=spec.bk,
                 interpret=interpret,
                 min_kernel_dim=1,  # the refiner already gated tiny shapes
+                precision=getattr(spec, "precision", "fp32"),
             )
             if form.B > 1:
                 out = jax.vmap(mm)(a2, b2)
@@ -253,4 +255,6 @@ def apply_chain(
         slot_elems=chain.slot_elems,
         interpret=interpret,
         use_kernel=use_kernel,
+        precisions=tuple(getattr(s, "precision", "fp32") for s in specs),
+        slot_prec=getattr(chain, "slot_prec", None) or None,
     )

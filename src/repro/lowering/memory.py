@@ -58,6 +58,25 @@ def node_nbytes(
     return size * itemsize
 
 
+def _nbytes_map(
+    tree: ContractionTree,
+    smask: int,
+    itemsize: int,
+    itemsize_of: dict[int, int] | None,
+) -> dict[int, int]:
+    """Per-node buffer bytes, dtype-true under mixed precision:
+    ``itemsize_of`` (from :func:`repro.lowering.precision.
+    storage_itemsizes`) overrides the uniform ``itemsize`` for nodes the
+    precision planner stores as bf16 component pairs."""
+    return {
+        v: node_nbytes(
+            tree, v, smask,
+            itemsize_of.get(v, itemsize) if itemsize_of else itemsize,
+        )
+        for v in tree.emask
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class SegmentPlan:
     """Static buffer plan for one execution segment.
@@ -276,21 +295,22 @@ def plan_memory(
     itemsize: int = 8,
     hoist: bool = True,
     part=None,
+    itemsize_of: dict[int, int] | None = None,
 ) -> MemoryPlan:
     """Build the lifetime-based :class:`MemoryPlan` for ``(tree, S)``.
 
     Pure planner algebra — no arrays are touched, so the slicer can call
     this inside its search loop.  ``itemsize`` is the execution dtype's
-    width (8 for complex64).  ``hoist=False`` skips the prologue/
+    width (8 for complex64); ``itemsize_of`` overrides it per node under
+    a mixed-precision plan (bf16-stored nodes at half width), making the
+    certified peaks dtype-true.  ``hoist=False`` skips the prologue/
     epilogue segments; ``part`` reuses a caller-held
     :class:`~repro.lowering.partition.TreePartition` for the same
     ``(tree, smask)`` instead of recomputing it."""
     order = tree.contract_order()
     steps = tuple((*tree.children[v], v) for v in order)
     n_leaves = tree.tn.num_tensors
-    nbytes = {
-        v: node_nbytes(tree, v, smask, itemsize) for v in tree.emask
-    }
+    nbytes = _nbytes_map(tree, smask, itemsize, itemsize_of)
     root = (tree.root,)
     naive = _plan_segment(
         "naive", tuple(range(n_leaves)), (), steps, root, nbytes
@@ -336,6 +356,7 @@ def certified_peak(
     smask: int = 0,
     itemsize: int = 8,
     part=None,
+    itemsize_of: dict[int, int] | None = None,
 ) -> int:
     """The certified live-set peak for ``(tree, S)``: the worst case over
     the naive full-tree subtask and the hoisted prologue/epilogue pair —
@@ -347,10 +368,11 @@ def certified_peak(
     candidate inside their search loops; skipping the allocator sweep
     keeps that evaluation cheap while matching :func:`plan_memory`'s
     peaks exactly (property-tested).  ``part`` reuses a caller-held
-    partition for the same ``(tree, smask)``."""
+    partition for the same ``(tree, smask)``; ``itemsize_of`` makes the
+    peak dtype-true under a mixed-precision plan."""
     order = tree.contract_order()
     steps = [(*tree.children[v], v) for v in order]
-    nbytes = {v: node_nbytes(tree, v, smask, itemsize) for v in tree.emask}
+    nbytes = _nbytes_map(tree, smask, itemsize, itemsize_of)
 
     def seg_peak(entry, seg_steps, outputs, pinned=()):
         birth, death = step_lifetimes(list(seg_steps), entry, outputs)

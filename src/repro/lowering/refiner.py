@@ -72,6 +72,7 @@ class GemmSpec:
     modeled_time_s: float
     pad_waste: float  # fraction of executed MXU FLOPs that are padding
     transpose_bytes: float = 0.0  # HBM bytes moved permuting the operands
+    precision: str = "fp32"  # "fp32" | "bf16" (bf16-input/fp32-accumulate)
 
 
 def default_fused() -> bool:
@@ -98,11 +99,23 @@ def default_megakernel() -> bool:
     return v == "1"
 
 
-def operand_transpose_bytes(form: GemmForm, dtype) -> float:
+def precision_itemsize(dtype, precision: str = "fp32") -> int:
+    """Storage bytes per element at ``precision``: half the native width
+    when the element's real components are held as bf16 (complex64 → a
+    bf16 pair = 4 bytes, float32 → 2 bytes), the native width for fp32."""
+    itemsize = int(jnp.dtype(dtype).itemsize)
+    return max(1, itemsize // 2) if precision == "bf16" else itemsize
+
+
+def operand_transpose_bytes(
+    form: GemmForm, dtype, precision: str = "fp32"
+) -> float:
     """HBM traffic of materializing the operand permutations: one read +
     one write per operand whose native layout is not already in GEMM
-    order — the ``2*(|A|+|B|)*bytes`` the fused kernel eliminates."""
-    itemsize = jnp.dtype(dtype).itemsize
+    order — the ``2*(|A|+|B|)*bytes`` the fused kernel eliminates.
+    Operands consumed at bf16 are permuted at their (halved) storage
+    width."""
+    itemsize = precision_itemsize(dtype, precision)
     t = 0.0
     if form.perm_a != tuple(range(len(form.perm_a))):
         t += 2.0 * itemsize * form.B * form.M * form.K
@@ -123,8 +136,29 @@ def _real_gemm_count(dtype, backend: str) -> int:
     return 3 if backend == "pallas" else 4
 
 
+def step_traffic_bytes(
+    form: GemmForm, dtype, precision: str = "fp32"
+) -> float:
+    """Modeled HBM operand + output bytes for one execution of the step
+    (excluding any transpose round-trip): inputs at their storage
+    precision, output always at the full fp32-component width (the MXU
+    accumulates in fp32 and the result is written back as such)."""
+    itemsize = int(jnp.dtype(dtype).itemsize)
+    in_item = precision_itemsize(dtype, precision)
+    return float(form.B) * (
+        in_item * (form.M * form.K + form.K * form.N)
+        + itemsize * form.M * form.N
+    )
+
+
 def modeled_step_time(
-    form: GemmForm, dtype, backend: str, bm: int, bn: int, bk: int
+    form: GemmForm,
+    dtype,
+    backend: str,
+    bm: int,
+    bn: int,
+    bk: int,
+    precision: str = "fp32",
 ) -> tuple[float, float]:
     """(seconds, pad_waste) for one execution of this step.
 
@@ -137,14 +171,16 @@ def modeled_step_time(
     transpose bandwidth that the fused kernel (and XLA's fused einsum)
     eliminates: a separate, non-overlappable HBM round-trip before the
     GEMM proper.
+
+    ``precision="bf16"`` (MXU backends only) doubles the systolic-array
+    rate and halves the operand-side traffic — bf16 inputs, fp32
+    accumulation, fp32 output writeback.
     """
     n_real = _real_gemm_count(dtype, backend)
     flops = form.flops * n_real
-    itemsize = jnp.dtype(dtype).itemsize
-    traffic = itemsize * form.B * (
-        form.M * form.K + form.K * form.N + form.M * form.N
-    )
+    traffic = step_traffic_bytes(form, dtype, precision)
     t_mem = traffic / TPU_HBM_BW
+    mxu_peak = TPU_PEAK_FLOPS * (2.0 if precision == "bf16" else 1.0)
     if backend == "pallas":
         padded = (
             2.0
@@ -154,17 +190,17 @@ def modeled_step_time(
             * _ceil_to(form.K, bk)
             * n_real
         )
-        t_compute = padded / TPU_PEAK_FLOPS
+        t_compute = padded / mxu_peak
         waste = 1.0 - flops / padded
     elif backend == "pallas_fused":
-        t_compute = flops / TPU_PEAK_FLOPS
+        t_compute = flops / mxu_peak
         waste = 0.0
     else:
         t_compute = flops / (TPU_PEAK_FLOPS * NON_MXU_PEAK_FRACTION)
         waste = 0.0
     t = max(t_compute, t_mem)
     if backend in ("pallas", "dot"):
-        t += operand_transpose_bytes(form, dtype) / TPU_HBM_BW
+        t += operand_transpose_bytes(form, dtype, precision) / TPU_HBM_BW
     return t, waste
 
 
@@ -174,6 +210,7 @@ def refine_step(
     *,
     min_kernel_dim: int = TPU_MXU,
     fused: bool | None = None,
+    precision: str = "fp32",
 ) -> GemmSpec:
     """Pick backend + block shapes for one normalized contraction step.
 
@@ -182,6 +219,13 @@ def refine_step(
     is admissible when its effective axis-suffix tiles are still
     MXU-sized — its cost model pays no padding FLOPs and no operand
     transpose bandwidth, so it wins whenever admissible.
+
+    ``precision="bf16"`` refines the step under the bf16-input/
+    fp32-accumulate model: the VMEM working-set check counts 2-byte
+    operand components (the fp32 accumulator tile stays 4-byte), so
+    larger blocks become admissible, and the cost model prices 2× MXU
+    rate / half operand traffic.  Only MXU backends carry the precision —
+    dot/einsum fallbacks always execute fp32.
     """
     if fused is None:
         fused = default_fused()
@@ -196,16 +240,25 @@ def refine_step(
         return GemmSpec(
             form, "dot", 0, 0, 0, t, w, operand_transpose_bytes(form, dtype)
         )
+    # per-component operand bytes at the requested precision; the fp32
+    # accumulator/output tile is always 4-byte
+    ob = 2 if precision == "bf16" else real_bytes
     best: GemmSpec | None = None
-    tbytes = operand_transpose_bytes(form, dtype)
+    tbytes = operand_transpose_bytes(form, dtype, precision)
     for bm in BLOCK_CANDIDATES:
         for bn in BLOCK_CANDIDATES:
             for bk in BLOCK_CANDIDATES:
-                if 4 * (bm * bk + bk * bn + bm * bn) > VMEM_BUDGET_BYTES:
+                if ob * (bm * bk + bk * bn) + 4 * bm * bn > (
+                    VMEM_BUDGET_BYTES
+                ):
                     continue  # working set must stay VMEM-resident
-                t, w = modeled_step_time(form, dtype, "pallas", bm, bn, bk)
+                t, w = modeled_step_time(
+                    form, dtype, "pallas", bm, bn, bk, precision
+                )
                 if best is None or t < best.modeled_time_s:
-                    best = GemmSpec(form, "pallas", bm, bn, bk, t, w, tbytes)
+                    best = GemmSpec(
+                        form, "pallas", bm, bn, bk, t, w, tbytes, precision
+                    )
                 if not fused:
                     continue
                 # fused candidate at the same targets: effective tiles are
@@ -215,22 +268,37 @@ def refine_step(
                 _, _, tk = suffix_tile_split(form.k_shape, bk)
                 if min(tm, tn, tk) < min_kernel_dim:
                     continue
-                if 4 * (tm * tk + tk * tn + tm * tn) > VMEM_BUDGET_BYTES:
+                if ob * (tm * tk + tk * tn) + 4 * tm * tn > (
+                    VMEM_BUDGET_BYTES
+                ):
                     continue
                 tf, wf = modeled_step_time(
-                    form, dtype, "pallas_fused", tm, tn, tk
+                    form, dtype, "pallas_fused", tm, tn, tk, precision
                 )
                 if tf < best.modeled_time_s:
-                    best = GemmSpec(form, "pallas_fused", tm, tn, tk, tf, wf)
+                    best = GemmSpec(
+                        form, "pallas_fused", tm, tn, tk, tf, wf, 0.0,
+                        precision,
+                    )
     return best
 
 
 @dataclasses.dataclass
 class LoweredSchedule:
-    """Refined kernel schedule for every step of a ContractionPlan."""
+    """Refined kernel schedule for every step of a ContractionPlan.
+
+    ``precision_mode``/``fidelity_tol``/``predicted_amp_error`` record
+    the mixed-precision assignment (see :mod:`repro.lowering.precision`):
+    the mode the plan was built under, the XEB-fidelity budget it was
+    certified against, and the forward error model's accumulated relative
+    amplitude error over the bf16 nodes.  All default to the pure-fp32
+    schedule."""
 
     specs: list[GemmSpec]
     dtype: str
+    precision_mode: str = "fp32"
+    fidelity_tol: float = 0.0
+    predicted_amp_error: float = 0.0
 
     @property
     def modeled_time_s(self) -> float:
@@ -242,6 +310,23 @@ class LoweredSchedule:
         for s in self.specs:
             counts[s.backend] = counts.get(s.backend, 0) + 1
         return counts
+
+    def precision_counts(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for s in self.specs:
+            counts[s.precision] = counts.get(s.precision, 0) + 1
+        return counts
+
+    def hbm_traffic_bytes(self) -> float:
+        """Modeled HBM operand/output traffic for one slice, at each
+        step's storage precision, including the materialized-transpose
+        round trips (complex elements count both components via the
+        native itemsize)."""
+        return sum(
+            step_traffic_bytes(s.form, self.dtype, s.precision)
+            + s.transpose_bytes
+            for s in self.specs
+        )
 
     def pad_waste(self) -> float:
         """FLOPs-weighted padding fraction across the Pallas nodes."""
@@ -278,6 +363,10 @@ class LoweredSchedule:
             "transpose_bytes": self.transpose_bytes(),
             "transpose_bytes_eliminated": self.transpose_bytes_eliminated(),
             "dtype": self.dtype,
+            "precision_mode": self.precision_mode,
+            "precision_counts": self.precision_counts(),
+            "predicted_amp_error": self.predicted_amp_error,
+            "fidelity_tol": self.fidelity_tol,
         }
 
     def summary_row(self) -> str:
@@ -287,10 +376,17 @@ class LoweredSchedule:
             for k in ("pallas_fused", "pallas", "dot", "einsum")
             if k in c
         )
+        pc = self.precision_counts()
+        prec = (
+            f" bf16={pc['bf16']}/{len(self.specs)}"
+            f" amp_err={self.predicted_amp_error:.2e}"
+            if pc.get("bf16")
+            else ""
+        )
         return (
             f"lowered[{self.dtype}]: {len(self.specs)} nodes ({per}) "
             f"pad_waste={self.pad_waste()*100:.1f}% "
-            f"t_model={self.modeled_time_s:.3e}s/slice"
+            f"t_model={self.modeled_time_s:.3e}s/slice{prec}"
         )
 
 
@@ -403,6 +499,11 @@ class FusedChainSpec:
     slot_elems: tuple[int, ...]
     roundtrip_bytes_saved: float
     transpose_bytes_saved: float
+    # per-scratch-slot storage precision: "bf16" when every interior
+    # intermediate assigned to the slot is consumed at bf16 (the slot is
+    # then a bf16 VMEM buffer at half the bytes), "fp32" otherwise.
+    # Empty (the default) means all-fp32 — pre-precision plans.
+    slot_prec: tuple[str, ...] = ()
 
     @property
     def n_steps(self) -> int:
@@ -494,10 +595,20 @@ def _build_chain(
     specs,
     nbytes: dict[int, int],
     itemsize: int,
+    itemsize_of: dict[int, int] | None = None,
 ):
     """Assemble the FusedChainSpec (or its certification plan) for one
-    candidate run of schedule positions.  Returns ``(spec, live_bytes)``."""
+    candidate run of schedule positions.  Returns ``(spec, live_bytes)``.
+
+    ``itemsize_of`` maps env keys to their *storage* itemsize when the
+    precision planner stores some nodes as bf16 component pairs —
+    ``nbytes`` is then precision-aware, and the scratch-slot element
+    counts must divide by each node's own itemsize, not the schedule
+    dtype's."""
     from .memory import chain_segment_plan  # lazy: avoid cycle
+
+    def isz(v: int) -> int:
+        return itemsize_of.get(v, itemsize) if itemsize_of else itemsize
 
     nodes = tuple(step_nodes[p] for p in run)
     carry_side = [""]
@@ -521,9 +632,16 @@ def _build_chain(
     remap = {s: d for d, s in enumerate(used)}
     slot_ids = tuple(remap[seg.slot_of[v]] for v in interior)
     slot_bytes = [0] * len(used)
-    for v in interior:
+    slot_elems = [0] * len(used)
+    slot_wide = [False] * len(used)
+    for t, v in enumerate(interior):
         d = remap[seg.slot_of[v]]
         slot_bytes[d] = max(slot_bytes[d], nbytes[v])
+        slot_elems[d] = max(slot_elems[d], nbytes[v] // isz(v))
+        # the consuming step (t+1 within the run) fixes the interior's
+        # storage precision; a slot is bf16 only if no occupant needs f32
+        if specs[run[t + 1]].precision != "bf16":
+            slot_wide[d] = True
     roundtrip = sum(2.0 * nbytes[v] for v in interior)
     transpose = sum(specs[p].transpose_bytes for p in run)
     spec = FusedChainSpec(
@@ -535,9 +653,12 @@ def _build_chain(
         out_node=out_node,
         live_bytes=seg.peak_bytes,
         slot_ids=slot_ids,
-        slot_elems=tuple(b // itemsize for b in slot_bytes),
+        slot_elems=tuple(slot_elems),
         roundtrip_bytes_saved=roundtrip,
         transpose_bytes_saved=transpose,
+        slot_prec=tuple(
+            "fp32" if wide else "bf16" for wide in slot_wide
+        ),
     )
     return spec, seg.peak_bytes
 
@@ -550,6 +671,7 @@ def plan_chains(
     *,
     vmem_budget: int = CHAIN_VMEM_BUDGET_BYTES,
     min_len: int = 2,
+    itemsize_of: dict[int, int] | None = None,
 ) -> ChainPlan:
     """The fusion-boundary pass: greedily grow runs of adjacent steps
     along each segment's execution order while the certified live set —
@@ -563,7 +685,11 @@ def plan_chains(
     buffer) can never be chain-interior — its consumer is outside the
     segment, so adjacency fails there by construction.  ``nbytes`` is the
     per-node buffer size from the memory plan (same dict for every
-    segment)."""
+    segment); under a mixed-precision plan it is dtype-true (bf16-stored
+    nodes at half bytes) and ``itemsize_of`` supplies each node's storage
+    itemsize so scratch slots are sized in elements correctly — the
+    CHAIN_VMEM_BUDGET_BYTES residency check thereby admits longer chains
+    when interiors are bf16."""
     itemsize = int(jnp.dtype(schedule.dtype).itemsize)
     real_bytes = real_component_bytes(schedule.dtype)
     chains: list[FusedChainSpec] = []
@@ -588,7 +714,7 @@ def plan_chains(
                     break
                 _, live = _build_chain(
                     name, run + [q], step_nodes, schedule.specs, nbytes,
-                    itemsize,
+                    itemsize, itemsize_of,
                 )
                 if live > vmem_budget:
                     break
@@ -596,7 +722,8 @@ def plan_chains(
                 j += 1
             if len(run) >= min_len:
                 spec, _ = _build_chain(
-                    name, run, step_nodes, schedule.specs, nbytes, itemsize
+                    name, run, step_nodes, schedule.specs, nbytes,
+                    itemsize, itemsize_of,
                 )
                 chains.append(spec)
             i = j + 1
@@ -647,6 +774,8 @@ def modeled_plan_time(
     *,
     part=None,
     fused: bool | None = None,
+    precision: str = "fp32",
+    fidelity_tol: float | None = None,
 ) -> float:
     """Modeled wall seconds of *two-phase* execution for ``(tree, S)``:
     the refined prologue runs once, the refined epilogue ``2^|S|`` times.
@@ -655,11 +784,20 @@ def modeled_plan_time(
     ``ContractionPlan`` (and no jit trace) is built, so the anytime
     co-optimizer can score candidates with ``objective="modeled_time"``
     directly from planner state.  ``part`` reuses a caller-held
-    :class:`~repro.lowering.partition.TreePartition`."""
+    :class:`~repro.lowering.partition.TreePartition`.  ``precision``/
+    ``fidelity_tol`` score with the mixed-precision assignment the plan
+    would actually run under (see :mod:`repro.lowering.precision`)."""
     from ..core.tensor_network import popcount  # lazy: avoid cycle
 
     sched = refine_tree_schedule(tree, smask, dtype=dtype, fused=fused)
     if not smask:
+        if precision != "fp32":
+            from .precision import assign_precision  # lazy: avoid cycle
+
+            sched = assign_precision(
+                sched, mode=precision, fidelity_tol=fidelity_tol,
+                fused=fused,
+            )
         return sched.modeled_time_s
     if part is None:
         from .partition import partition_tree  # lazy: avoid cycle
@@ -667,10 +805,20 @@ def modeled_plan_time(
         part = partition_tree(tree, smask)
     invariant = set(part.invariant_nodes)
     order = tree.contract_order()
+    n_slices = 1 << popcount(smask)
+    if precision != "fp32":
+        from .precision import assign_precision  # lazy: avoid cycle
+
+        epilogue = tuple(
+            i for i, v in enumerate(order) if v not in invariant
+        )
+        sched = assign_precision(
+            sched, mode=precision, fidelity_tol=fidelity_tol,
+            epilogue_positions=epilogue, n_slices=n_slices, fused=fused,
+        )
     prologue_t = sum(
         spec.modeled_time_s
         for v, spec in zip(order, sched.specs)
         if v in invariant
     )
-    n_slices = 1 << popcount(smask)
     return prologue_t + (sched.modeled_time_s - prologue_t) * n_slices

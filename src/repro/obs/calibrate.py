@@ -8,7 +8,10 @@ ever *checked* those models against real hardware.  :func:`calibrate_plan`
 executes a plan's steps eagerly, one at a time, with a
 ``block_until_ready`` fence around each, and joins the measured walls
 with the modeled per-slice times into a per-backend-class table
-(``pallas`` / ``pallas_fused`` / ``chain`` / ``dot`` / ``einsum``).
+(``pallas`` / ``pallas_fused`` / ``chain`` / ``dot`` / ``einsum``; under
+mixed precision, non-fp32 steps split into their own rows, e.g.
+``pallas[bf16]`` / ``chain[mixed]`` — bf16 runs against a different MXU
+roofline, so its measured/modeled ratio is a separate signal).
 
 The measured/modeled ratio per class is the feedback signal the
 ROADMAP's adaptive refiner and work-stealing scheduler need: a class
@@ -37,6 +40,17 @@ class CalibrationRow:
     measured_s: float  # min-over-repeat eager wall, block_until_ready
     modeled_s: float  # refiner / cost-model per-slice seconds
     flops: float  # modeled real-multiply FLOPs of the step (per slice)
+    precision: str = "fp32"  # operand precision (chain: "mixed" if split)
+
+    @property
+    def cls(self) -> str:
+        """Calibration class: the backend, qualified by precision when
+        the step does not run at full fp32 (``pallas[bf16]``,
+        ``chain[mixed]``, …) — bf16 steps hit a different roofline, so
+        folding them into the fp32 rows would skew both ratios."""
+        if self.precision == "fp32":
+            return self.backend
+        return f"{self.backend}[{self.precision}]"
 
     @property
     def ratio(self) -> float:
@@ -57,7 +71,7 @@ class CalibrationReport:
         agg: dict[str, dict] = {}
         for r in self.rows:
             a = agg.setdefault(
-                r.backend,
+                r.cls,
                 {"count": 0, "measured_s": 0.0, "modeled_s": 0.0},
             )
             a["count"] += 1
@@ -157,6 +171,7 @@ def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
                 - ch.hbm_bytes_saved / TPU_HBM_BW
             )
             flops = sum(s.form.flops for s in specs)
+            precs = {getattr(s, "precision", "fp32") for s in specs}
             rows.append(
                 CalibrationRow(
                     node=ch.out_node,
@@ -164,6 +179,9 @@ def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
                     measured_s=measured,
                     modeled_s=max(modeled, 0.0),
                     flops=flops,
+                    precision=(
+                        precs.pop() if len(precs) == 1 else "mixed"
+                    ),
                 )
             )
             k += ch.n_steps
@@ -181,6 +199,7 @@ def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
             )
             cls = "einsum"
             flops = 0.0
+            prec = "fp32"
         else:
             from ..lowering import gemm_form
 
@@ -192,6 +211,7 @@ def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
             modeled = spec.modeled_time_s
             cls = spec.backend
             flops = spec.form.flops
+            prec = getattr(spec, "precision", "fp32")
         env[st.out] = out
         rows.append(
             CalibrationRow(
@@ -200,6 +220,7 @@ def calibrate_plan(plan, arrays, slice_id: int = 0, repeat: int = 2):
                 measured_s=measured,
                 modeled_s=modeled,
                 flops=flops,
+                precision=prec,
             )
         )
         k += 1

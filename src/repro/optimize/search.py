@@ -86,12 +86,21 @@ def oneshot_plan(
     slicing_mode: str = "width",
     itemsize: int = 8,
     budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
 ) -> OneShot:
     """The classic staged pipeline, each stage run exactly once:
     multi-restart greedy path, Alg.-2 tuning, branch merging, GEMM
     orientation, then slicing (optionally peak-refined).  This is both
     the default planner of :func:`repro.core.api.plan_contraction` and
-    the baseline/seed of :func:`plan_search`."""
+    the baseline/seed of :func:`plan_search`.
+
+    Under a mixed-precision mode (``precision`` ∈ {"bf16", "auto"}) with
+    peak-mode slicing, the refined mask gets a second, *prune-only* pass
+    at the same fp32-derived budget using the plan's per-node storage
+    itemsizes: bf16-stored intermediates halve the certified peak, so
+    the bf16 mask is always a subset of the fp32 one (|S| never larger).
+    """
     tree = random_greedy_tree(tn, repeats=repeats, seed=seed)
     width0 = tree.width()
     if tune and method == "lifetime":
@@ -108,6 +117,24 @@ def oneshot_plan(
             tree, smask, target_dim, itemsize=itemsize,
             budget_bytes=budget_bytes,
         )
+        if smask and precision is not None and precision != "fp32":
+            from ..lowering.precision import tree_storage_itemsizes
+
+            iso = tree_storage_itemsizes(
+                tree, smask, itemsize=itemsize, mode=precision,
+                fidelity_tol=fidelity_tol,
+            )
+            if iso:
+                fp32_budget = budget_bytes
+                if fp32_budget is None:
+                    fp32_budget = max(
+                        peak_budget_for_width(target_dim, itemsize),
+                        certified_peak(tree, smask, itemsize),
+                    )
+                smask = refine_slices_for_peak(
+                    tree, smask, target_dim, itemsize=itemsize,
+                    budget_bytes=fp32_budget, itemsize_of=iso,
+                )
     elif slicing_mode not in ("width", "peak"):
         raise ValueError(f"unknown slicing_mode {slicing_mode!r}")
     return OneShot(tree, smask, width0)
@@ -256,6 +283,8 @@ def plan_search(
     stall_limit: int = 6,
     temperature: float = 1.0,
     cooling: float = 0.95,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
 ) -> SearchResult:
     """Anytime co-optimization of ``(tree, S)`` under a certified peak
     budget.
@@ -305,7 +334,10 @@ def plan_search(
     def score(tree: ContractionTree, smask: int, part) -> float:
         if objective == "flops":
             return part.hoisted_cost() if part else tree.total_cost()
-        return modeled_plan_time(tree, smask, dtype=obj_dtype, part=part)
+        return modeled_plan_time(
+            tree, smask, dtype=obj_dtype, part=part,
+            precision=precision or "fp32", fidelity_tol=fidelity_tol,
+        )
 
     budget = budget_bytes  # resolved after the first seed evaluation
     evals = 0
@@ -375,6 +407,7 @@ def plan_search(
                 tn, target_dim, method=method, tune=tune, merge=merge,
                 repeats=repeats, seed=seed, slicing_mode=slicing_mode,
                 itemsize=itemsize, budget_bytes=budget_bytes,
+                precision=precision, fidelity_tol=fidelity_tol,
             )
             tree, warm = shot.tree, shot.smask
             width_before = shot.width_before
