@@ -1,0 +1,285 @@
+"""Contraction-serving benchmark — the EngineServer under tenant traffic.
+
+Three measurements on the multi-tenant engine
+(:class:`repro.engine.server.EngineServer`):
+
+  * **cold vs warm** — per circuit family, the first burst pays planning
+    (cold); later bursts hit the compiled-plan cache and run warm.  The
+    p50/p99 split quantifies what the plan cache buys a serving
+    deployment (the refactor's acceptance bar: warm p50 at least 5x
+    below cold).
+  * **batched vs serial** — 8 concurrent amplitude tenants whose
+    bitstrings differ on 3 qubits: served coalesced (one open-qubit
+    batch contraction answers all 8) vs through a ``max_batch=1`` server
+    (one scalar contraction each).  Bar: batched at least 2x the req/s.
+  * **Poisson mixed traffic** — open-loop arrivals (exponential
+    inter-arrival gaps) of amplitude + sampling requests across all
+    families, the steady-state p50/p99/req/s a tenant actually sees.
+
+Standalone runs append trajectory records for ``benchmarks.make_tables``:
+
+    PYTHONPATH=src python -m benchmarks.bench_serving \
+        --trajectory experiments/serving
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.engine import AmplitudeRequest, EngineServer, SampleRequest
+from repro.quantum.circuits import random_1d_circuit, sycamore_like
+
+from .common import append_trajectory
+
+FAMILIES = {
+    "syc-3x3x8": (lambda: sycamore_like(3, 3, 8, seed=41), 10),
+    "syc-3x4x8": (lambda: sycamore_like(3, 4, 8, seed=42), 8),
+    "rand1d-10x8": (lambda: random_1d_circuit(10, 8, seed=43), 10),
+}
+VARY = 3  # qubits the burst's bitstrings differ on (coalescible)
+TENANTS = 8
+WARM_BURSTS = 3
+
+
+def _quantiles(lat: list[float]) -> dict:
+    q = np.quantile(np.asarray(lat), [0.5, 0.99])
+    return {"p50_s": float(q[0]), "p99_s": float(q[1])}
+
+
+def _amp_requests(circuit, target_dim, n, seed):
+    nq = circuit.num_qubits
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        bits = ["0"] * nq
+        for j, b in enumerate(rng.integers(0, 2, size=VARY)):
+            bits[nq - VARY + j] = str(int(b))
+        reqs.append(
+            AmplitudeRequest(circuit, "".join(bits), target_dim=target_dim)
+        )
+    return reqs
+
+
+def _burst(srv, reqs):
+    tickets = [srv.submit(r) for r in reqs]
+    t0 = time.perf_counter()
+    for t in tickets:
+        t.result(timeout=600)
+    wall = time.perf_counter() - t0
+    return [t.total_s for t in tickets], wall
+
+
+def cold_warm_rows() -> list[dict]:
+    recs = []
+    with EngineServer(max_batch=TENANTS, max_open=VARY,
+                      max_queue=256) as srv:
+        for name, (make, td) in FAMILIES.items():
+            circuit = make()
+            mixed = _amp_requests(circuit, td, TENANTS - 1, seed=0) + [
+                SampleRequest(circuit, num_samples=512, target_dim=td)
+            ]
+            cold_lat, cold_wall = _burst(srv, mixed)
+            warm_lat, warm_wall = [], 0.0
+            for b in range(WARM_BURSTS):
+                lat, wall = _burst(
+                    srv,
+                    _amp_requests(circuit, td, TENANTS - 1, seed=b + 1)
+                    + [
+                        SampleRequest(
+                            circuit, num_samples=512, target_dim=td,
+                            seed=b + 1,
+                        )
+                    ],
+                )
+                warm_lat += lat
+                warm_wall += wall
+            cold_q, warm_q = _quantiles(cold_lat), _quantiles(warm_lat)
+            recs.append(
+                {
+                    "kind": "cold_warm",
+                    "family": name,
+                    "tenants": TENANTS,
+                    "cold_p50_s": cold_q["p50_s"],
+                    "cold_p99_s": cold_q["p99_s"],
+                    "cold_req_per_s": len(mixed) / cold_wall,
+                    "warm_p50_s": warm_q["p50_s"],
+                    "warm_p99_s": warm_q["p99_s"],
+                    "warm_req_per_s": len(mixed) * WARM_BURSTS / warm_wall,
+                    "warm_p50_speedup": cold_q["p50_s"] / warm_q["p50_s"],
+                }
+            )
+        stats = srv.stats()
+    recs.append(
+        {
+            "kind": "server_stats",
+            "phase": "cold_warm",
+            **{
+                k: stats[k]
+                for k in (
+                    "completed", "coalesced", "groups",
+                    "warm_groups", "cold_groups",
+                )
+            },
+        }
+    )
+    return recs
+
+
+def batching_rows() -> list[dict]:
+    """8 concurrent amplitude tenants, warm plans: coalesced batch vs a
+    ``max_batch=1`` server that contracts one scalar per request."""
+    name = "syc-3x3x8"
+    make, td = FAMILIES[name]
+    circuit = make()
+    reqs = _amp_requests(circuit, td, TENANTS, seed=7)
+
+    def run(max_batch):
+        with EngineServer(max_batch=max_batch, max_open=VARY,
+                          max_queue=256) as srv:
+            _burst(srv, reqs)  # warm the family + traces
+            best = float("inf")
+            for _ in range(3):
+                lat, wall = _burst(srv, reqs)
+                if wall < best:
+                    best, best_lat = wall, lat
+            coalesced = srv.stats()["coalesced"]
+        return best_lat, best, coalesced
+
+    lat_b, wall_b, co_b = run(max_batch=TENANTS)
+    lat_s, wall_s, co_s = run(max_batch=1)
+    return [
+        {
+            "kind": "batching",
+            "family": name,
+            "tenants": TENANTS,
+            "batched_req_per_s": TENANTS / wall_b,
+            "serial_req_per_s": TENANTS / wall_s,
+            "batched_coalesced": co_b,
+            "serial_coalesced": co_s,
+            **{f"batched_{k}": v for k, v in _quantiles(lat_b).items()},
+            **{f"serial_{k}": v for k, v in _quantiles(lat_s).items()},
+            "throughput_gain": wall_s / wall_b,
+        }
+    ]
+
+
+def poisson_rows(n_requests: int = 48, rate_hz: float = 200.0,
+                 seed: int = 3) -> list[dict]:
+    """Open-loop Poisson arrivals of mixed amplitude/sampling traffic
+    across all (pre-warmed) families."""
+    rng = np.random.default_rng(seed)
+    fams = [(name, make(), td) for name, (make, td) in FAMILIES.items()]
+    with EngineServer(max_batch=TENANTS, max_open=VARY,
+                      max_queue=1024) as srv:
+        for _, circuit, td in fams:
+            # warm every plan the mixed load will hit: the scalar
+            # amplitude network (singleton groups), the coalesced
+            # open-window batch, and the sampling batch network
+            _burst(srv, _amp_requests(circuit, td, 1, seed=4))
+            _burst(
+                srv,
+                _amp_requests(circuit, td, 4, seed=5)
+                + [SampleRequest(circuit, num_samples=32, target_dim=td)],
+            )
+        tickets = []
+        t0 = time.perf_counter()
+        for i in range(n_requests):
+            name, circuit, td = fams[i % len(fams)]
+            if i % 6 == 5:
+                req = SampleRequest(
+                    circuit, num_samples=256, target_dim=td, seed=i
+                )
+            else:
+                req = _amp_requests(circuit, td, 1, seed=100 + i)[0]
+            tickets.append(srv.submit(req))
+            time.sleep(float(rng.exponential(1.0 / rate_hz)))
+        for t in tickets:
+            t.result(timeout=600)
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+    lat = [t.total_s for t in tickets]
+    batched = sum(1 for t in tickets if t.batched)
+    return [
+        {
+            "kind": "poisson",
+            "families": len(fams),
+            "requests": n_requests,
+            "offered_rate_hz": rate_hz,
+            "req_per_s": n_requests / wall,
+            **_quantiles(lat),
+            "mean_queue_s": float(np.mean([t.queue_s for t in tickets])),
+            "batched_fraction": batched / n_requests,
+            "groups": stats["groups"],
+            "coalesced": stats["coalesced"],
+        }
+    ]
+
+
+def _records() -> list[dict]:
+    return cold_warm_rows() + batching_rows() + poisson_rows()
+
+
+def run() -> list[str]:
+    rows = []
+    for r in _records():
+        if r["kind"] == "cold_warm":
+            rows.append(
+                f"serving_coldwarm_{r['family']},{r['warm_p50_s']*1e6:.0f},"
+                f"cold_p50_s={r['cold_p50_s']:.3f};"
+                f"warm_p50_speedup={r['warm_p50_speedup']:.1f};"
+                f"warm_req_per_s={r['warm_req_per_s']:.1f}"
+            )
+        elif r["kind"] == "batching":
+            rows.append(
+                f"serving_batching,{r['batched_p50_s']*1e6:.0f},"
+                f"batched_req_per_s={r['batched_req_per_s']:.1f};"
+                f"serial_req_per_s={r['serial_req_per_s']:.1f};"
+                f"gain={r['throughput_gain']:.2f}"
+            )
+        elif r["kind"] == "poisson":
+            rows.append(
+                f"serving_poisson,{r['p50_s']*1e6:.0f},"
+                f"req_per_s={r['req_per_s']:.1f};p99_s={r['p99_s']:.3f};"
+                f"batched_fraction={r['batched_fraction']:.2f}"
+            )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trajectory", default=None,
+                    help="append records under this directory "
+                         "(e.g. experiments/serving)")
+    args = ap.parse_args()
+    recs = _records()
+    for r in recs:
+        if r["kind"] == "cold_warm":
+            print(
+                f"{r['family']}: cold p50 {r['cold_p50_s']*1e3:.0f} ms -> "
+                f"warm p50 {r['warm_p50_s']*1e3:.1f} ms "
+                f"({r['warm_p50_speedup']:.1f}x), "
+                f"warm {r['warm_req_per_s']:.0f} req/s"
+            )
+        elif r["kind"] == "batching":
+            print(
+                f"batching x{r['tenants']}: coalesced "
+                f"{r['batched_req_per_s']:.0f} req/s vs serial "
+                f"{r['serial_req_per_s']:.0f} req/s "
+                f"({r['throughput_gain']:.2f}x)"
+            )
+        elif r["kind"] == "poisson":
+            print(
+                f"poisson {r['requests']} req @ {r['offered_rate_hz']:.0f} Hz"
+                f": p50 {r['p50_s']*1e3:.1f} ms, p99 {r['p99_s']*1e3:.1f} ms,"
+                f" {r['req_per_s']:.0f} req/s, "
+                f"{r['batched_fraction']*100:.0f}% batched"
+            )
+    if args.trajectory:
+        append_trajectory(recs, args.trajectory)
+
+
+if __name__ == "__main__":
+    main()

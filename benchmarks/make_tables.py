@@ -437,6 +437,67 @@ def print_precision_table(precision_dir="experiments/precision") -> None:
         )
 
 
+def print_serving_table(serving_dir="experiments/serving") -> None:
+    """§Serving rows from ``benchmarks.bench_serving`` trajectory
+    records: cold-vs-warm latency per circuit family, the coalesced
+    batched-vs-serial throughput comparison, and the Poisson mixed-
+    traffic steady state."""
+    path = os.path.join(serving_dir, "trajectory.json")
+    rows = []
+    if os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if isinstance(rec, dict):
+            rows = rec.get("records", [])
+    cw = [r for r in rows if r.get("kind") == "cold_warm"]
+    bt = [r for r in rows if r.get("kind") == "batching"]
+    po = [r for r in rows if r.get("kind") == "poisson"]
+    if cw:
+        print("\n### Serving: cold vs warm "
+              "(plan cache across tenant bursts)\n")
+        print("| family | tenants | cold p50 / p99 | warm p50 / p99 | "
+              "warm p50 speedup | warm req/s |")
+        print("|---|---|---|---|---|---|")
+        for r in cw:
+            print(
+                f"| {r.get('family', '-')} | {r.get('tenants', '-')} "
+                f"| {fmt_s(r.get('cold_p50_s'))} / "
+                f"{fmt_s(r.get('cold_p99_s'))} "
+                f"| {fmt_s(r.get('warm_p50_s'))} / "
+                f"{fmt_s(r.get('warm_p99_s'))} "
+                f"| {r.get('warm_p50_speedup', 0):.1f}× "
+                f"| {r.get('warm_req_per_s', 0):.0f} |"
+            )
+    if bt:
+        print("\n### Serving: coalesced batching vs serial "
+              "(concurrent amplitude tenants, warm plans)\n")
+        print("| family | tenants | batched req/s (p50) | "
+              "serial req/s (p50) | gain |")
+        print("|---|---|---|---|---|")
+        for r in bt:
+            print(
+                f"| {r.get('family', '-')} | {r.get('tenants', '-')} "
+                f"| {r.get('batched_req_per_s', 0):.0f} "
+                f"({fmt_s(r.get('batched_p50_s'))}) "
+                f"| {r.get('serial_req_per_s', 0):.0f} "
+                f"({fmt_s(r.get('serial_p50_s'))}) "
+                f"| {r.get('throughput_gain', 0):.2f}× |"
+            )
+    if po:
+        print("\n### Serving: Poisson mixed traffic (steady state)\n")
+        print("| families | requests | offered | served req/s | "
+              "p50 | p99 | batched |")
+        print("|---|---|---|---|---|---|---|")
+        for r in po:
+            print(
+                f"| {r.get('families', '-')} | {r.get('requests', '-')} "
+                f"| {r.get('offered_rate_hz', 0):.0f} Hz "
+                f"| {r.get('req_per_s', 0):.0f} "
+                f"| {fmt_s(r.get('p50_s'))} | {fmt_s(r.get('p99_s'))} "
+                f"| {r.get('batched_fraction', 0)*100:.0f}% |"
+            )
+
+
 def main() -> None:
     recs = load()
     # ---------------- dry-run table (both meshes) ----------------
@@ -495,6 +556,7 @@ def main() -> None:
     print_obs_table()
     print_precision_table()
     print_distributed_table()
+    print_serving_table()
 
 
 if __name__ == "__main__":

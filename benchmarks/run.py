@@ -17,6 +17,7 @@ def main() -> None:
         bench_flops_efficiency,
         bench_roofline,
         bench_sampling_throughput,
+        bench_serving,
         bench_slice_count,
         bench_slicefinder_speed,
         bench_slicing_overhead,
@@ -35,6 +36,7 @@ def main() -> None:
         ("sampling", bench_sampling_throughput),
         ("roofline", bench_roofline),
         ("distributed", bench_distributed_scaling),
+        ("serving", bench_serving),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -4,7 +4,7 @@ GQA model and an attention-free SSM, reporting tokens/s.
     PYTHONPATH=src python examples/serve_lm.py
 """
 
-from repro.launch.serve import serve
+from repro.launch.decode_demo import serve
 
 
 def main() -> None:

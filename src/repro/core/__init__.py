@@ -19,6 +19,9 @@ The paper's contribution lives here:
 from .api import (  # noqa: F401
     PlanReport,
     SimulationResult,
+    draw_from_batch,
+    open_amplitude_batch,
+    open_session,
     plan_compiled,
     plan_contraction,
     sample_bitstrings,

@@ -387,56 +387,116 @@ def _plan_compiled(
         )
     tol = DEFAULT_FIDELITY_TOL if fidelity_tol is None else float(fidelity_tol)
     t0 = time.perf_counter()
-    key = None
-    if use_cache:
-        # REPRO_FUSED_GEMM changes the refined schedule, so it is part of
-        # the key (like the backend itself)
-        # search params only shape the plan under optimize="anytime" —
-        # keep them out of the oneshot key so ignored knobs cannot
-        # cause spurious cache misses
-        search_key = (
-            (search_evals, search_workers, search_wall_s)
-            if optimize == "anytime"
-            else ()
+
+    def _build() -> PlanEntry:
+        plan, report = _plan_fresh(
+            tn, target_dim, dtype=dtype, backend=backend, method=method,
+            tune=tune, merge=merge, repeats=repeats, seed=seed,
+            slicing_mode=slicing_mode, optimize=optimize,
+            search_evals=search_evals, search_workers=search_workers,
+            search_wall_s=search_wall_s, budget_bytes=budget_bytes,
+            precision_mode=precision_mode, tol=tol, t0=t0,
         )
-        # REPRO_MEGAKERNEL changes the plan's chain dispatch the same way
-        # REPRO_FUSED_GEMM changes its schedule — both join the key
-        # the resolved precision mode always joins the key; the fidelity
-        # tolerance only matters off fp32, so fp32 plans at different
-        # tolerances share one entry instead of fragmenting the cache
-        key = network_fingerprint(
-            tn,
-            dtype,
-            extra=(backend, target_dim, method, tune, merge, repeats, seed,
-                   slicing_mode, default_fused(), default_megakernel(),
-                   optimize, budget_bytes, search_key,
-                   precision_mode,
-                   tol if precision_mode != "fp32" else None),
+        return PlanEntry(plan, report)
+
+    if not use_cache:
+        ent = _build()
+        return ent.plan, ent.report
+    # REPRO_FUSED_GEMM changes the refined schedule, so it is part of
+    # the key (like the backend itself)
+    # search params only shape the plan under optimize="anytime" —
+    # keep them out of the oneshot key so ignored knobs cannot
+    # cause spurious cache misses
+    search_key = (
+        (search_evals, search_workers, search_wall_s)
+        if optimize == "anytime"
+        else ()
+    )
+    # REPRO_MEGAKERNEL changes the plan's chain dispatch the same way
+    # REPRO_FUSED_GEMM changes its schedule — both join the key
+    # the resolved precision mode always joins the key; the fidelity
+    # tolerance only matters off fp32, so fp32 plans at different
+    # tolerances share one entry instead of fragmenting the cache
+    key = network_fingerprint(
+        tn,
+        dtype,
+        extra=(backend, target_dim, method, tune, merge, repeats, seed,
+               slicing_mode, default_fused(), default_megakernel(),
+               optimize, budget_bytes, search_key,
+               precision_mode,
+               tol if precision_mode != "fp32" else None),
+    )
+    fresh: list[PlanEntry] = []
+
+    def _factory() -> PlanEntry:
+        ent = _build()
+        fresh.append(ent)
+        return ent
+
+    # single-flight: concurrent misses on one family (threaded serving
+    # dispatch) elect one planner; the rest wait for its entry instead of
+    # replanning — and the get→plan→put race that let two threads each
+    # plan and the loser overwrite the winner's jit-warmed plan is gone
+    ent = PLAN_CACHE.single_flight(key, _factory)
+    stats = PLAN_CACHE.stats()
+    if fresh:
+        # this thread planned: report the fresh-planning run
+        return ent.plan, dataclasses.replace(
+            ent.report,
+            cache_hits=stats["hits"],
+            cache_misses=stats["misses"],
+            search_trace=(
+                [dict(t) for t in ent.report.search_trace]
+                if ent.report.search_trace is not None
+                else None
+            ),
         )
-        ent = PLAN_CACHE.get(key)
-        if ent is not None:
-            stats = PLAN_CACHE.stats()
-            # hoist mode is an execution-time choice (REPRO_HOIST may have
-            # changed since the plan was cached): re-derive it so the
-            # report describes the mode that will actually run
-            hoist_on = default_hoist()
-            report = dataclasses.replace(
-                ent.report,
-                plan_wall_s=time.perf_counter() - t0,
-                cache_hit=True,
-                cache_hits=stats["hits"],
-                cache_misses=stats["misses"],
-                hoist=hoist_on,
-                measured_overhead=ent.plan.executed_overhead(hoist_on),
-                # copy the one mutable field so a caller mutating its
-                # report can never corrupt the cached template
-                search_trace=(
-                    [dict(t) for t in ent.report.search_trace]
-                    if ent.report.search_trace is not None
-                    else None
-                ),
-            )
-            return ent.plan, report
+    # cache hit (or waited on another thread's in-flight planning).
+    # hoist mode is an execution-time choice (REPRO_HOIST may have
+    # changed since the plan was cached): re-derive it so the
+    # report describes the mode that will actually run
+    hoist_on = default_hoist()
+    report = dataclasses.replace(
+        ent.report,
+        plan_wall_s=time.perf_counter() - t0,
+        cache_hit=True,
+        cache_hits=stats["hits"],
+        cache_misses=stats["misses"],
+        hoist=hoist_on,
+        measured_overhead=ent.plan.executed_overhead(hoist_on),
+        # copy the one mutable field so a caller mutating its
+        # report can never corrupt the cached template
+        search_trace=(
+            [dict(t) for t in ent.report.search_trace]
+            if ent.report.search_trace is not None
+            else None
+        ),
+    )
+    return ent.plan, report
+
+
+def _plan_fresh(
+    tn,
+    target_dim: int,
+    dtype,
+    backend: str,
+    method: str,
+    tune: bool,
+    merge: bool,
+    repeats: int,
+    seed: int,
+    slicing_mode: str,
+    optimize: str,
+    search_evals: int,
+    search_workers: int,
+    search_wall_s: float | None,
+    budget_bytes: int | None,
+    precision_mode: str,
+    tol: float,
+    t0: float,
+) -> tuple[ContractionPlan, PlanReport]:
+    """One fresh planning + lowering run (no cache consultation) — the
+    body a :meth:`PlanCache.single_flight` leader executes."""
     tree, smask, report = plan_contraction(
         tn, target_dim, method=method, tune=tune, merge=merge,
         repeats=repeats, seed=seed, slicing_mode=slicing_mode,
@@ -516,19 +576,6 @@ def _plan_compiled(
             - cp.modeled_time_saved_s("epilogue") * (1 << plan.num_sliced),
         )
     report.plan_wall_s = time.perf_counter() - t0
-    if use_cache:
-        PLAN_CACHE.put(key, PlanEntry(plan, report))
-        stats = PLAN_CACHE.stats()
-        report = dataclasses.replace(
-            report,
-            cache_hits=stats["hits"],
-            cache_misses=stats["misses"],
-            search_trace=(
-                [dict(t) for t in report.search_trace]
-                if report.search_trace is not None
-                else None
-            ),
-        )
     return plan, report
 
 
@@ -668,42 +715,27 @@ def sample_bitstrings(
         )
         print(res.bitstrings[:3], res.xeb)
     """
-    from ..quantum import xeb as xeb_mod  # avoid import cycle
-    from ..sampling import AmplitudeBatch, batch as batch_mod, samplers
-
-    n = circuit.num_qubits
     if num_samples <= 0:
         raise ValueError(f"num_samples must be positive, got {num_samples}")
     if sampler not in ("frequency", "rejection", "topk"):
         raise ValueError(f"unknown sampler {sampler!r}")  # fail pre-contraction
-    if open_qubits is None:
-        k = min(6, n)
-        open_qubits = tuple(range(n - k, n))
-    open_qubits = tuple(sorted(set(open_qubits)))
-    if not open_qubits:
-        raise ValueError("need at least one open qubit to sample")
-    if base_bitstring is None:
-        base_bitstring = "0" * n
-    elif len(base_bitstring) != n or set(base_bitstring) - {"0", "1"}:
-        raise ValueError(
-            f"base_bitstring must be {n} chars of 0/1, got {base_bitstring!r}"
-        )
 
     with _trace.enabled_scope(telemetry):
-        tn, arrays = batch_mod.open_batch_network(
-            circuit, base_bitstring, open_qubits
-        )
-        # open indices cannot be sliced: the width floor is the batch rank
-        plan, report = plan_compiled(
-            tn,
-            max(target_dim, len(open_qubits) + 1),
-            dtype=arrays[0].dtype if arrays else None,
-            backend=backend,
+        batch, report = open_amplitude_batch(
+            circuit,
+            open_qubits=open_qubits,
+            base_bitstring=base_bitstring,
+            target_dim=target_dim,
             method=method,
             tune=tune,
             merge=merge,
             seed=seed,
+            slice_batch=slice_batch,
+            mesh=mesh,
+            axis_names=axis_names,
+            backend=backend,
             use_cache=use_cache,
+            hoist=hoist,
             slicing_mode=slicing_mode,
             optimize=optimize,
             search_evals=search_evals,
@@ -713,22 +745,126 @@ def sample_bitstrings(
             precision=precision,
             fidelity_tol=fidelity_tol,
         )
-        amps = batch_mod.contract_amplitude_batch(
-            plan, arrays, slice_batch=slice_batch, mesh=mesh,
-            axis_names=axis_names, hoist=hoist,
+        res = draw_from_batch(
+            batch, num_samples, sampler=sampler, seed=seed
         )
-        if hoist is not None:
-            report = dataclasses.replace(
-                report,
-                hoist=bool(hoist),
-                measured_overhead=plan.executed_overhead(bool(hoist)),
-            )
-        batch = AmplitudeBatch(amps, open_qubits, base_bitstring, n)
-        idx = samplers.draw(batch, num_samples, sampler=sampler, seed=seed)
         if _trace.enabled():
             report = dataclasses.replace(
                 report, telemetry=_telemetry_snapshot()
             )
+    res.report = report
+    return res
+
+
+def open_amplitude_batch(
+    circuit,
+    open_qubits=None,
+    base_bitstring: str | None = None,
+    target_dim: int = 20,
+    method: str = "lifetime",
+    tune: bool = True,
+    merge: bool = True,
+    seed: int = 0,
+    slice_batch: int = 4,
+    mesh=None,
+    axis_names: tuple[str, ...] = ("data",),
+    backend: str | None = None,
+    use_cache: bool = True,
+    hoist: bool | None = None,
+    slicing_mode: str = "width",
+    optimize: str = "oneshot",
+    search_evals: int = 64,
+    search_workers: int = 4,
+    search_wall_s: float | None = None,
+    budget_bytes: int | None = None,
+    precision: str | None = None,
+    fidelity_tol: float | None = None,
+):
+    """Contract one open-qubit batch: the planning + execution half of
+    :func:`sample_bitstrings`, without drawing any samples.
+
+    Returns ``(AmplitudeBatch, PlanReport)`` — all ``2^k`` correlated
+    amplitudes sharing ``base_bitstring`` outside ``open_qubits``.  The
+    serving engine (:mod:`repro.engine.server`) calls this directly: one
+    batch contraction answers a whole coalesced group of amplitude
+    requests (read at their flat batch indices) or feeds any number of
+    per-tenant :func:`draw_from_batch` calls.  Defaults mirror
+    :func:`sample_bitstrings` (open the last ``min(6, n)`` qubits,
+    all-zeros base)."""
+    from ..sampling import AmplitudeBatch, batch as batch_mod
+
+    n = circuit.num_qubits
+    if open_qubits is None:
+        k = min(6, n)
+        open_qubits = tuple(range(n - k, n))
+    open_qubits = tuple(sorted(set(open_qubits)))
+    if not open_qubits:
+        raise ValueError("need at least one open qubit")
+    if base_bitstring is None:
+        base_bitstring = "0" * n
+    elif len(base_bitstring) != n or set(base_bitstring) - {"0", "1"}:
+        raise ValueError(
+            f"base_bitstring must be {n} chars of 0/1, got {base_bitstring!r}"
+        )
+
+    tn, arrays = batch_mod.open_batch_network(
+        circuit, base_bitstring, open_qubits
+    )
+    # open indices cannot be sliced: the width floor is the batch rank
+    plan, report = plan_compiled(
+        tn,
+        max(target_dim, len(open_qubits) + 1),
+        dtype=arrays[0].dtype if arrays else None,
+        backend=backend,
+        method=method,
+        tune=tune,
+        merge=merge,
+        seed=seed,
+        use_cache=use_cache,
+        slicing_mode=slicing_mode,
+        optimize=optimize,
+        search_evals=search_evals,
+        search_workers=search_workers,
+        search_wall_s=search_wall_s,
+        budget_bytes=budget_bytes,
+        precision=precision,
+        fidelity_tol=fidelity_tol,
+    )
+    amps = batch_mod.contract_amplitude_batch(
+        plan, arrays, slice_batch=slice_batch, mesh=mesh,
+        axis_names=axis_names, hoist=hoist,
+    )
+    if hoist is not None:
+        report = dataclasses.replace(
+            report,
+            hoist=bool(hoist),
+            measured_overhead=plan.executed_overhead(bool(hoist)),
+        )
+    return AmplitudeBatch(amps, open_qubits, base_bitstring, n), report
+
+
+def draw_from_batch(
+    batch,
+    num_samples: int,
+    sampler: str = "frequency",
+    seed: int = 0,
+    report: PlanReport | None = None,
+):
+    """Draw + score a sample set from an already-contracted
+    :class:`~repro.sampling.AmplitudeBatch`.
+
+    The sampling half of :func:`sample_bitstrings`: many tenants (or
+    repeated calls with different seeds/samplers) can share one batch
+    contraction and each pay only the multinomial/rejection draw.
+    Returns a :class:`~repro.sampling.SamplingResult`."""
+    from ..quantum import xeb as xeb_mod  # avoid import cycle
+    from ..sampling import samplers
+
+    if num_samples <= 0:
+        raise ValueError(f"num_samples must be positive, got {num_samples}")
+    if sampler not in ("frequency", "rejection", "topk"):
+        raise ValueError(f"unknown sampler {sampler!r}")
+    idx = samplers.draw(batch, num_samples, sampler=sampler, seed=seed)
     flat = batch.flat()
     sampled_amps = flat[idx]
     probs = np.abs(sampled_amps) ** 2
@@ -736,8 +872,42 @@ def sample_bitstrings(
         bitstrings=batch.bitstrings_for(idx),
         amplitudes=sampled_amps,
         probs=probs,
-        xeb=xeb_mod.linear_xeb(n, probs),
+        xeb=xeb_mod.linear_xeb(batch.num_qubits, probs),
         batch=batch,
         sampler=sampler,
         report=report,
     )
+
+
+def open_session(
+    circuit,
+    bitstring: str,
+    target_dim: int = 20,
+    hoist: bool | None = None,
+    backend: str | None = None,
+    use_cache: bool = True,
+    **plan_kwargs,
+):
+    """Plan a circuit amplitude and return a live
+    :class:`~repro.engine.session.ContractionSession` plus its report.
+
+    The session is the engine-level handle the slice drivers share: the
+    compiled plan bound to this bitstring's leaf arrays, hoist mode
+    resolved, ready for ``run_slice`` / ``run_slices`` / ``run_all``.
+    Callers that want to schedule slice execution themselves (custom
+    drivers, the serving engine, incremental/resumable loops) start
+    here instead of :func:`simulate_amplitude`."""
+    from ..engine.session import ContractionSession
+    from ..quantum.circuits import circuit_to_network  # avoid import cycle
+
+    tn, arrays = circuit_to_network(circuit, bitstring=bitstring)
+    tn, arrays = simplify_network(tn, arrays)
+    plan, report = plan_compiled(
+        tn,
+        target_dim,
+        dtype=arrays[0].dtype if arrays else None,
+        backend=backend,
+        use_cache=use_cache,
+        **plan_kwargs,
+    )
+    return ContractionSession(plan, arrays, hoist=hoist), report

@@ -30,16 +30,21 @@ collective transport, and elastic per-host claims built on
 :class:`SliceRangeCheckpoint` — lives in :mod:`repro.distributed`
 (``contract_multihost``); both layers share the slice-id contract
 defined here, and every path is behavior-identical at world size 1.
+
+Both drivers here are thin strategy adapters over the unified engine
+(:class:`repro.engine.session.ContractionSession`): the shard_map
+program, per-slice jit program, ragged-batch masking, hoisted-prologue
+materialization and work accounting have exactly one implementation in
+:mod:`repro.engine.session`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..obs import metrics as _metrics, trace as _trace
 from .executor import ContractionPlan
@@ -79,130 +84,16 @@ def contract_sharded(
     shard_map program is memoized on the plan per (mesh, axis set, slice
     batch, hoist mode) — repeated serving calls on a cached plan skip
     retracing.
+
+    Strategy adapter: the shard_map program, ragged padding, masking,
+    prologue replication and work accounting all live in the unified
+    engine (:meth:`~repro.engine.session.ContractionSession.run_sharded`).
     """
-    from .executor import default_hoist
+    from ..engine.session import ContractionSession  # lazy: cycle
 
-    ndev = 1
-    for ax in axis_names:
-        ndev *= mesh.shape[ax]
-    n_slices = 1 << plan.num_sliced
-    slice_batch = max(1, min(slice_batch, n_slices))
-    chunk = ndev * slice_batch
-    total = -(-n_slices // chunk) * chunk  # ceil to a multiple
-    # Ragged-batch contract: padding to a multiple of ndev*slice_batch is
-    # what guarantees every device's local id chunk reshapes exactly into
-    # (n_batches, slice_batch) — no divisibility assumption on n_slices.
-    # pad with wrapped-around slice ids masked out by a boolean validity
-    # mask (jnp.where, not a multiply: 0 * NaN/Inf would leak the padded
-    # contribution into the sum, and a weight multiply is dtype-lossy)
-    ids = np.arange(total, dtype=np.int32) % n_slices
-    valid = np.arange(total) < n_slices
-
-    hoist = default_hoist() if hoist is None else bool(hoist)
-    hoist = hoist and plan.can_hoist
-    # invariant prologue: once per process, outside the slice loop — and
-    # device-put replicated over the mesh once per (leaf set, mesh), not
-    # once per call: the placed copies ride in the HoistCache entry, so
-    # repeated serving calls on a plan-cache hit skip the re-broadcast
-    hoisted = (
-        plan.contract_prologue_replicated(arrays, mesh) if hoist else []
+    return ContractionSession(plan, arrays, hoist=hoist).run_sharded(
+        mesh, axis_names=axis_names, slice_batch=slice_batch
     )
-
-    from jax.experimental.shard_map import shard_map
-
-    spec = P(axis_names)
-
-    cache = getattr(plan, "_compiled", None)
-    key = ("sharded", mesh, tuple(axis_names), slice_batch, hoist)
-    cached = cache.get(key) if cache is not None else None
-    if cached is not None:
-        with _trace.span(
-            "exec.sharded", cat="exec", slices=n_slices, devices=ndev,
-            hoist=hoist, cached=True,
-        ):
-            out = cached(
-                list(arrays), list(hoisted),
-                jnp.asarray(ids), jnp.asarray(valid),
-            )
-            _trace.sync(out)
-        _record_sharded_metrics(plan, n_slices, total - n_slices, hoist)
-        return out
-
-    @jax.jit
-    def run(arrs, hbufs, ids_, valid_):
-        def worker(ids_local, valid_local):
-            # arrs/hbufs are closure captures: replicated on every device
-            contract = lambda sid: plan.contract_slice(  # noqa: E731
-                arrs, sid, hbufs if hoist else None
-            )
-            batched = jax.vmap(contract)
-            idb = ids_local.reshape(-1, slice_batch)
-            vb = valid_local.reshape(-1, slice_batch)
-
-            out_shape = jax.eval_shape(lambda: contract(jnp.int32(0)))
-            wshape = (-1,) + (1,) * len(out_shape.shape)
-
-            def body(acc, iv):
-                sids, ok = iv
-                contrib = batched(sids)
-                contrib = jnp.where(
-                    ok.reshape(wshape),
-                    contrib,
-                    jnp.zeros((), contrib.dtype),
-                )
-                return acc + jnp.sum(contrib, axis=0), None
-
-            acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
-            acc, _ = jax.lax.scan(body, acc0, (idb, vb))
-            return jax.lax.psum(acc, axis_names)
-
-        return shard_map(
-            worker,
-            mesh=mesh,
-            in_specs=(spec, spec),
-            out_specs=P(),
-            check_rep=False,
-        )(ids_, valid_)
-
-    if cache is not None:
-        # setdefault so concurrent threads converge on one jitted program
-        run = cache.setdefault(key, run)
-    with _trace.span(
-        "exec.sharded", cat="exec", slices=n_slices, devices=ndev,
-        hoist=hoist, cached=False,
-    ):
-        out = run(
-            list(arrays), list(hoisted), jnp.asarray(ids), jnp.asarray(valid)
-        )
-        _trace.sync(out)
-    _record_sharded_metrics(plan, n_slices, total, hoist)
-    return out
-
-
-def _record_sharded_metrics(plan, executed, padded, hoist) -> None:
-    """Work accounting shared by the sharded and multi-host call sites.
-
-    ``executed`` counts *real* slice ids summed into the amplitude;
-    ``padded`` counts masked lanes (wrapped-around ids whose contribution
-    a validity select zeroes out).  The two are disjoint by contract —
-    earlier revisions passed the padded total and inflated
-    ``exec.slices_executed`` whenever per-host batches were ragged, which
-    made multi-host FLOPs/chain accounting drift from the single-host
-    scan's on the same plan."""
-    _metrics.inc("exec.slices_executed", executed)
-    if padded:
-        _metrics.inc("exec.padded_slices", padded)
-    if hoist:
-        _metrics.inc(
-            "exec.flops_executed", plan.partition.per_slice_cost * executed
-        )
-    else:
-        _metrics.inc(
-            "exec.flops_executed", plan.executed_flops(executed, hoist=False)
-        )
-    chains = plan._chain_dispatch.get("epilogue" if hoist else "naive")
-    if chains:
-        _metrics.inc("exec.chain_calls", len(chains) * executed)
 
 
 @dataclasses.dataclass
@@ -297,31 +188,22 @@ def contract_resumable(
 
     ``fail_on``: slice-range starts that raise (simulated node failure) the
     first time they run.
-    """
-    from .executor import default_hoist
 
-    hoist = default_hoist() if hoist is None else bool(hoist)
-    hoist = hoist and plan.can_hoist
-    hoisted = plan.contract_prologue(arrays) if hoist else []
-    n_slices = 1 << plan.num_sliced
+    Strategy adapter: each slice executes as one
+    :meth:`~repro.engine.session.ContractionSession.run_slice` call (the
+    session owns the hoisted prologue and the jitted per-slice program);
+    only the checkpoint bookkeeping lives here.
+    """
+    from ..engine.session import ContractionSession  # lazy: cycle
+
+    sess = ContractionSession(plan, arrays, hoist=hoist)
+    hoist = sess.hoist
+    sess.hoisted()  # materialize the prologue outside the slice loop
+    n_slices = sess.n_slices
     if state is None:
-        out_shape = jax.eval_shape(
-            lambda: plan.contract_slice(list(arrays), jnp.int32(0))
-        )
-        state = SliceRangeCheckpoint(
-            n_slices, set(), np.zeros(out_shape.shape, out_shape.dtype)
-        )
+        state = SliceRangeCheckpoint(n_slices, set(), sess.zeros())
     failed = set(fail_on or ())
 
-    ck = ("resumable", hoist)
-    contract = plan._compiled.get(ck) or plan._compiled.setdefault(
-        ck,
-        jax.jit(
-            lambda arrs, hbufs, sid: plan.contract_slice(
-                arrs, sid, hbufs if hoist else None
-            )
-        ),
-    )
     with _trace.span(
         "exec.resumable", cat="exec", slices=n_slices, chunk=chunk,
         hoist=hoist,
@@ -337,7 +219,7 @@ def contract_resumable(
             ):
                 acc = None
                 for sid in range(s, e):
-                    r = contract(list(arrays), list(hoisted), jnp.int32(sid))
+                    r = sess.run_slice(sid)
                     acc = r if acc is None else acc + r
                 _trace.sync(acc)
             state.partial = state.partial + np.asarray(acc)

@@ -610,29 +610,36 @@ class ContractionPlan:
         """
         if not self.can_hoist:
             return []
-        key = None
+
+        def compute():
+            ck = ("prologue",)
+            fn = self._compiled.get(ck) or self._compiled.setdefault(
+                ck, jax.jit(lambda a: self._prologue_outputs(a))
+            )
+            with _trace.span(
+                "exec.prologue", cat="exec", buffers=len(self.hoisted_nodes)
+            ):
+                out = fn(list(arrays))
+                _trace.sync(out)
+            _metrics.inc(
+                "exec.flops_executed", self.partition.invariant_cost
+            )
+            return out
+
         if use_cache and self._hoist_cache.maxsize > 0:
             from ..lowering.cache import leaf_key  # lazy: cycle
 
             key, keepalive = leaf_key(arrays, self.prologue_leaves)
-            hit = self._hoist_cache.get(key)
-            if hit is not None:
-                return hit[0]
-        ck = ("prologue",)
-        fn = self._compiled.get(ck) or self._compiled.setdefault(
-            ck, jax.jit(lambda a: self._prologue_outputs(a))
-        )
-        with _trace.span(
-            "exec.prologue", cat="exec", buffers=len(self.hoisted_nodes)
-        ):
-            out = fn(list(arrays))
-            _trace.sync(out)
-        _metrics.inc("exec.flops_executed", self.partition.invariant_cost)
-        if key is not None:
+            # single-flight: concurrent sessions over the same leaves
+            # (serving tenants on one family) materialize the prologue
+            # once — the waiters get the leader's buffers, and the
+            # invariant-cost FLOPs are counted exactly once.
             # third slot: per-Mesh replicated device-put copies, filled
             # lazily by contract_prologue_replicated on the sharded path
-            self._hoist_cache.put(key, (out, keepalive, {}))
-        return out
+            return self._hoist_cache.single_flight(
+                key, lambda: (compute(), keepalive, {})
+            )[0]
+        return compute()
 
     def contract_prologue_replicated(
         self, arrays, mesh, use_cache: bool = True
@@ -678,118 +685,17 @@ class ContractionPlan:
         slice_batch: int = 8,
         hoist: bool | None = None,
     ) -> jnp.ndarray:
-        """Sum over all 2^|S| subtasks (single host).  Subtasks run in
-        vmapped batches of ``slice_batch`` and are accumulated with a
-        ``lax.scan`` so peak memory is bounded; a ragged final batch is
-        padded with wrapped-around slice ids masked by a validity weight.
+        """Sum over all 2^|S| subtasks (single host) — strategy adapter
+        over the unified engine: a one-shot
+        :class:`~repro.engine.session.ContractionSession` running the
+        scan-of-vmapped-batches strategy (:meth:`~repro.engine.session.
+        ContractionSession.run_all`).  ``hoist`` selects two-phase
+        execution (default ``REPRO_HOIST``)."""
+        from ..engine.session import ContractionSession  # lazy: cycle
 
-        ``hoist`` selects two-phase execution (default: ``REPRO_HOIST``):
-        the slice-invariant prologue is materialized once via
-        :meth:`contract_prologue` and the scan runs only the epilogue.
-        Within the jitted scan, buffer reclamation is driven by the
-        memory plan's deterministic free schedule (:meth:`_run_steps`
-        drops each tracer at its planned last use, which is what lets
-        XLA's allocator reuse the slot); jit-argument donation of the
-        hoisted buffers would be a no-op here — donated inputs are only
-        reclaimed via input→output aliasing and the scan's sole output
-        is the small amplitude accumulator."""
-        n_slices = 1 << self.num_sliced
-        if self.num_sliced == 0:
-            key = ("dense",)
-            # setdefault: concurrent serving threads race to publish, but
-            # all end up calling the one surviving jitted fn (single trace)
-            fn = self._compiled.get(key) or self._compiled.setdefault(
-                key, jax.jit(lambda a: self.contract_slice(a, 0))
-            )
-            with _trace.span(
-                "exec.contract_all", cat="exec", slices=1, hoist=False
-            ):
-                out = fn(list(arrays))
-                _trace.sync(out)
-            _metrics.inc("exec.slices_executed", 1)
-            _metrics.inc(
-                "exec.flops_executed", self.executed_flops(1, hoist=False)
-            )
-            return out
-        hoist = default_hoist() if hoist is None else bool(hoist)
-        hoist = hoist and self.can_hoist
-        slice_batch = max(1, min(slice_batch, n_slices))
-        n_batches = -(-n_slices // slice_batch)
-        total = n_batches * slice_batch
-        padded = total != n_slices
-        key = ("all", slice_batch, hoist)
-        fn = self._compiled.get(key)
-        if fn is None:
-            ids = jnp.asarray(
-                np.arange(total, dtype=np.int32) % n_slices
-            ).reshape(n_batches, slice_batch)
-            # boolean validity mask for the wrapped-around padding lanes.
-            # Masking must be a select, NOT a weight multiply: a NaN/Inf
-            # in a padded contribution leaks through ``0 * NaN == NaN``
-            # (e.g. a legitimately overflowing slice would corrupt the
-            # whole sum), and the float32 weight multiply is dtype-lossy
-            # under x64.
-            w = jnp.asarray(np.arange(total) < n_slices).reshape(
-                n_batches, slice_batch
-            )
-
-            @jax.jit
-            def run(arrs, hbufs):
-                batched = jax.vmap(
-                    lambda sid: self.contract_slice(
-                        arrs, sid, hbufs if hoist else None
-                    )
-                )
-
-                def body(acc, chunk_w):
-                    chunk, wk = chunk_w
-                    contrib = batched(chunk)
-                    if padded:
-                        contrib = jnp.where(
-                            wk.reshape((-1,) + (1,) * (contrib.ndim - 1)),
-                            contrib,
-                            jnp.zeros((), contrib.dtype),
-                        )
-                    return acc + jnp.sum(contrib, axis=0), None
-
-                out_shape = jax.eval_shape(
-                    lambda: jnp.sum(batched(ids[0]), axis=0)
-                )
-                acc0 = jnp.zeros(out_shape.shape, out_shape.dtype)
-                acc, _ = jax.lax.scan(body, acc0, (ids, w))
-                return acc
-
-            fn = self._compiled.setdefault(key, run)
-        with _trace.span(
-            "exec.contract_all",
-            cat="exec",
-            slices=n_slices,
-            slice_batch=slice_batch,
-            hoist=hoist,
-            backend=self.backend,
-        ):
-            hoisted = self.contract_prologue(arrays) if hoist else []
-            out = fn(list(arrays), list(hoisted))
-            _trace.sync(out)
-        _metrics.inc("exec.slices_executed", n_slices)
-        if padded:
-            _metrics.inc("exec.padded_slices", total - n_slices)
-        if hoist:
-            # prologue FLOPs are counted where the prologue actually runs
-            # (contract_prologue — a hoist-cache hit executes nothing)
-            _metrics.inc(
-                "exec.flops_executed",
-                self.partition.per_slice_cost * n_slices,
-            )
-        else:
-            _metrics.inc(
-                "exec.flops_executed",
-                self.executed_flops(n_slices, hoist=False),
-            )
-        chains = self._chain_dispatch.get("epilogue" if hoist else "naive")
-        if chains:
-            _metrics.inc("exec.chain_calls", len(chains) * n_slices)
-        return out
+        return ContractionSession(self, arrays, hoist=hoist).run_all(
+            slice_batch=slice_batch
+        )
 
 
 def contract_dense(

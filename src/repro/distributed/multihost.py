@@ -7,8 +7,9 @@ N-process run executes identically:
      seed)`` (no communication needed to agree on the assignment);
   2. claim ranges through the :class:`~repro.distributed.scheduler.
      Arbiter` — own queue first, then steal — and execute each as one
-     jitted vmapped slice batch (wrapped ids + validity mask, same
-     ragged-batch contract as ``contract_all``);
+     :meth:`~repro.engine.session.ContractionSession.run_slices` batch
+     (wrapped ids + validity mask, the engine's shared ragged-batch
+     contract — the same masked-vmap program every driver runs);
   3. persist every completed range's partial delta to the elastic
      :class:`~repro.distributed.elastic.ClaimStore` (when a checkpoint
      dir is given): fault tolerance is a side effect of the hot loop,
@@ -29,8 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..obs import metrics as _metrics, trace as _trace
@@ -140,19 +139,17 @@ def contract_multihost(
     dead peer would hang a collective rendezvous, so failure runs are
     file-transport by construction).
     """
-    from ..core.distributed import (
-        SliceRangeCheckpoint,
-        _record_sharded_metrics,
-    )
-    from ..core.executor import auto_slice_batch, default_hoist
+    from ..core.distributed import SliceRangeCheckpoint
+    from ..core.executor import auto_slice_batch
+    from ..engine.session import ContractionSession, record_execution
 
     jrank, jsize = world()
     rank = jrank if rank is None else int(rank)
     size = jsize if world_size is None else int(world_size)
-    n_slices = 1 << plan.num_sliced
+    sess = ContractionSession(plan, arrays, hoist=hoist)
+    n_slices = sess.n_slices
     sb = auto_slice_batch(slice_batch, n_slices)
-    hoist = default_hoist() if hoist is None else bool(hoist)
-    hoist = hoist and plan.can_hoist
+    hoist = sess.hoist
 
     if costs is None and plan.num_sliced:
         from ..optimize.search import per_slice_cost_vector
@@ -183,30 +180,8 @@ def contract_multihost(
     )
     rounds = max(1, tp.rounds)
 
-    hoisted = plan.contract_prologue(arrays) if hoist else []
-    out_shape = jax.eval_shape(
-        lambda: plan.contract_slice(list(arrays), jnp.int32(0))
-    )
-    zero = np.zeros(out_shape.shape, out_shape.dtype)
-
-    ck = ("mh_batch", sb, hoist)
-    fn = plan._compiled.get(ck)
-    if fn is None:
-
-        @jax.jit
-        def fn(arrs, hbufs, ids_, valid_):
-            contract = lambda sid: plan.contract_slice(  # noqa: E731
-                arrs, sid, hbufs if hoist else None
-            )
-            contrib = jax.vmap(contract)(ids_)
-            contrib = jnp.where(
-                valid_.reshape((-1,) + (1,) * (contrib.ndim - 1)),
-                contrib,
-                jnp.zeros((), contrib.dtype),
-            )
-            return jnp.sum(contrib, axis=0)
-
-        fn = plan._compiled.setdefault(ck, fn)
+    sess.hoisted()  # materialize the prologue outside the claim loop
+    zero = sess.zeros()
 
     own0 = len(scheduler.queues[rank])
     per_round = max(1, -(-own0 // rounds))  # ranges between pushes
@@ -250,10 +225,7 @@ def contract_multihost(
                 "exec.mh_range", cat="exec", start=rng.start, end=rng.end,
                 stolen=rng.home != rank,
             ):
-                delta = fn(
-                    list(arrays), list(hoisted),
-                    jnp.asarray(ids), jnp.asarray(valid),
-                )
+                delta = sess.run_slices(ids, valid)
             since_push = delta if since_push is None else since_push + delta
             executed_ranges.append(rng.key())
             executed_ids += rng.n_ids
@@ -284,7 +256,7 @@ def contract_multihost(
         final_state = store.merged()
         complete = not final_state.missing(1)
 
-    _record_sharded_metrics(plan, executed_ids, padded, hoist)
+    record_execution(plan, executed_ids, padded, hoist)
     imb = scheduler.realized_imbalance()
     if report is not None:
         report.schedule_imbalance = imb

@@ -1,0 +1,37 @@
+"""Unified execution engine + contraction-as-a-service.
+
+:mod:`repro.engine.session` is the single session layer every slice
+driver executes through (``contract_all`` / ``contract_sharded`` /
+``contract_resumable`` / ``contract_multihost`` are thin strategy
+adapters over :class:`ContractionSession.run_slices`);
+:mod:`repro.engine.server` is the multi-tenant continuous-batching
+amplitude/sampling engine built on top of sessions.
+"""
+
+from .session import (
+    ContractionSession,
+    mask_invalid,
+    padded_ids,
+    record_execution,
+)
+from .server import (
+    AmplitudeRequest,
+    EngineServer,
+    SampleRequest,
+    ServerOverloaded,
+    Ticket,
+    circuit_fingerprint,
+)
+
+__all__ = [
+    "ContractionSession",
+    "mask_invalid",
+    "padded_ids",
+    "record_execution",
+    "AmplitudeRequest",
+    "EngineServer",
+    "SampleRequest",
+    "ServerOverloaded",
+    "Ticket",
+    "circuit_fingerprint",
+]

@@ -1,11 +1,16 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Contraction-serving CLI: fire a mixed tenant burst at the engine.
 
-Demonstrates the inference path on any mesh (including 1 CPU device):
-jitted prefill + decode with a persistent KV/SSM cache, greedy sampling,
-and tokens/s accounting.
+Launch driver for :class:`repro.engine.server.EngineServer` — the
+multi-tenant contraction-as-a-service layer.  Submits a burst of
+amplitude requests (bitstrings varying on the last ``--vary`` qubits, so
+the server can coalesce them into open-qubit batch contractions) plus a
+few correlated-sampling tenants against one circuit family, then prints
+per-request queue/compute latencies and the server's coalescing
+counters.  The second burst of a run is the warm path: the family's
+plan is cached, so it shows the serving speedup the plan cache buys.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --rows 3 --cols 3 \
+        --cycles 8 --amps 12 --samples 2 --target-dim 12
 """
 
 from __future__ import annotations
@@ -13,105 +18,105 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config, smoke_shrink
+from ..engine import AmplitudeRequest, EngineServer, SampleRequest
 from ..obs import log as obs_log
-from ..models import build_model
-from ..parallel.sharding import init_params
-from ..train.train_step import make_decode_step, make_prefill_step
+from ..quantum.circuits import sycamore_like
 
 
-def serve(
-    arch: str,
-    smoke: bool = True,
-    batch: int = 4,
-    prompt_len: int = 64,
-    gen_tokens: int = 32,
+def _burst(
+    srv: EngineServer,
+    circuit,
+    n_amps: int,
+    n_samples: int,
+    target_dim: int,
+    vary: int,
     seed: int = 0,
 ):
-    cfg = get_config(arch)
-    if smoke:
-        cfg = smoke_shrink(cfg)
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(seed)
-    params = init_params(model.param_defs(), key)
-
-    max_len = prompt_len + gen_tokens
-    # window archs need the ring alignment: round max_len to the window
-    if cfg.window:
-        max_len = -(-max_len // cfg.window) * cfg.window
-
-    b = {"tokens": jax.random.randint(key, (batch, prompt_len), 0,
-                                      cfg.vocab_size)}
-    if cfg.is_encdec or cfg.embed_inputs:
-        b["embeds"] = jax.random.normal(
-            key, (batch, prompt_len, cfg.d_model), jnp.float32
+    """Submit one mixed burst and wait for every ticket."""
+    n = circuit.num_qubits
+    rng = np.random.default_rng(seed)
+    tickets = []
+    for i in range(n_amps):
+        tail = rng.integers(0, 2, size=min(vary, n))
+        bits = ["0"] * n
+        for j, b in enumerate(tail):
+            bits[n - len(tail) + j] = str(int(b))
+        tickets.append(
+            srv.submit(
+                AmplitudeRequest(
+                    circuit, "".join(bits), target_dim=target_dim
+                )
+            )
         )
-        if not cfg.is_encdec:
-            pass  # decoder-only embed-input archs still decode over tokens
-    if cfg.mrope:
-        b["positions"] = jnp.broadcast_to(
-            jnp.arange(prompt_len, dtype=jnp.int32), (3, batch, prompt_len)
+    for i in range(n_samples):
+        tickets.append(
+            srv.submit(
+                SampleRequest(
+                    circuit,
+                    num_samples=256,
+                    target_dim=target_dim,
+                    seed=seed + i,
+                )
+            )
         )
-
-    prefill = jax.jit(
-        lambda p, bb: model.prefill(p, bb, max_len=max_len)
-    )
-    decode = jax.jit(make_decode_step(model))
-
     t0 = time.perf_counter()
-    cache, logits = prefill(params, b)
-    logits.block_until_ready()
-    t_prefill = time.perf_counter() - t0
-
-    tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    outs = [np.asarray(tokens)]
-    t0 = time.perf_counter()
-    for i in range(gen_tokens - 1):
-        pos = jnp.int32(prompt_len + i)
-        mrope = (
-            jnp.full((3, batch, 1), prompt_len + i, jnp.int32)
-            if cfg.mrope
-            else None
-        )
-        logits, cache = decode(params, cache, tokens, pos, mrope)
-        tokens = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        outs.append(np.asarray(tokens))
-    jax.block_until_ready(tokens)
-    t_decode = time.perf_counter() - t0
-    gen = np.concatenate(outs, axis=1)
-    toks_per_s = batch * (gen_tokens - 1) / max(t_decode, 1e-9)
-    return {
-        "generated": gen,
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_per_s": toks_per_s,
-    }
+    for t in tickets:
+        t.result(timeout=600)
+    wall = time.perf_counter() - t0
+    return tickets, wall
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap = argparse.ArgumentParser(
+        description="serve amplitude/sampling traffic on the engine"
+    )
+    ap.add_argument("--rows", type=int, default=3)
+    ap.add_argument("--cols", type=int, default=3)
+    ap.add_argument("--cycles", type=int, default=8)
+    ap.add_argument("--target-dim", type=int, default=12)
+    ap.add_argument("--amps", type=int, default=12,
+                    help="amplitude requests per burst")
+    ap.add_argument("--samples", type=int, default=2,
+                    help="sampling requests per burst")
+    ap.add_argument("--vary", type=int, default=4,
+                    help="qubits the amplitude bitstrings vary on")
+    ap.add_argument("--bursts", type=int, default=2,
+                    help="bursts to fire (first is cold, rest warm)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    r = serve(
-        args.arch,
-        batch=args.batch,
-        prompt_len=args.prompt_len,
-        gen_tokens=args.gen,
-    )
+
+    circuit = sycamore_like(args.rows, args.cols, args.cycles,
+                            seed=args.seed)
+    with EngineServer(
+        max_queue=args.max_queue,
+        max_batch=args.max_batch,
+        max_open=max(1, args.vary),
+    ) as srv:
+        for burst in range(args.bursts):
+            tickets, wall = _burst(
+                srv, circuit, args.amps, args.samples,
+                args.target_dim, args.vary, seed=args.seed + burst,
+            )
+            lat = sorted(t.total_s for t in tickets)
+            obs_log.info(
+                f"burst {burst} ({'cold' if burst == 0 else 'warm'}): "
+                f"{len(tickets)} requests in {wall:.2f}s "
+                f"({len(tickets)/max(wall, 1e-9):.1f} req/s), "
+                f"p50 {lat[len(lat)//2]*1e3:.0f} ms, "
+                f"max {lat[-1]*1e3:.0f} ms",
+                burst=burst, wall_s=wall,
+            )
+        st = srv.stats()
     obs_log.info(
-        f"prefill {r['prefill_s']*1e3:.1f} ms, decode {r['decode_s']*1e3:.1f} ms"
-        f" → {r['decode_tok_per_s']:.1f} tok/s",
-        prefill_s=r["prefill_s"], decode_s=r["decode_s"],
+        f"served {st['completed']} ok / {st['failed']} failed / "
+        f"{st['rejected']} rejected; {st['coalesced']} coalesced over "
+        f"{st['groups']} groups ({st['warm_families']} warm families)",
+        **{k: st[k] for k in ("completed", "coalesced", "groups")},
     )
-    obs_log.info(f"sample: {r['generated'][0][:16]}")
 
 
 if __name__ == "__main__":

@@ -145,6 +145,7 @@ class PlanCache:
         self.maxsize = maxsize
         self._entries: OrderedDict[str, PlanEntry] = OrderedDict()
         self._lock = threading.Lock()
+        self._inflight: dict[str, threading.Event] = {}
         self.hits = 0
         self.misses = 0
 
@@ -166,6 +167,50 @@ class PlanCache:
             self._entries.move_to_end(key)
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
+
+    def single_flight(self, key: str, factory):
+        """Return the entry for ``key``, computing it at most once across
+        concurrent threads.
+
+        The first thread to miss becomes the *leader*: it runs
+        ``factory()`` outside the lock (planning takes seconds — holding
+        the lock would serialize unrelated families) and publishes the
+        result with :meth:`put`.  Threads that miss while the key is in
+        flight wait on the leader's event instead of replanning — under
+        threaded serving dispatch, N concurrent requests for a new
+        circuit family cost ONE planning run, not N.  A leader whose
+        factory raises wakes the waiters and clears the in-flight mark;
+        the next waiter retries as the new leader, so a transient
+        planning failure never wedges the key.  Waiters count as hits
+        (they were served from cached work), the leader as the one miss.
+        """
+        while True:
+            with self._lock:
+                ent = self._entries.get(key)
+                if ent is not None:
+                    self._entries.move_to_end(key)
+                    self.hits += 1
+                    _metrics.inc(f"{self._metric}.hits")
+                    return ent
+                ev = self._inflight.get(key)
+                leader = ev is None
+                if leader:
+                    ev = self._inflight[key] = threading.Event()
+                    self.misses += 1
+                    _metrics.inc(f"{self._metric}.misses")
+            if leader:
+                try:
+                    value = factory()
+                    self.put(key, value)
+                    return value
+                finally:
+                    with self._lock:
+                        self._inflight.pop(key, None)
+                    ev.set()
+            else:
+                ev.wait()
+                # loop: entry present on leader success; leader failure
+                # promotes this waiter to leader on the next pass
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -4,8 +4,24 @@ The numeric side of the observability layer (spans answer *where time
 went*; metrics answer *how much work happened*): plan-cache and
 HoistCache hits/misses/evicted bytes, slices executed, fused-chain
 dispatches, executed FLOPs, ragged-padding waste, search accept/reject
-counts.  The registry is thread-safe, snapshot-able as one plain dict
-(:func:`snapshot`) and reset-able for tests (:func:`reset`).
+counts, serving queue/compute latencies.  The registry is thread-safe,
+snapshot-able as one plain dict (:func:`snapshot`) and reset-able for
+tests (:func:`reset`).
+
+Writer/snapshot consistency: every instrument mutation happens under the
+registry's (reentrant) lock — the same lock :meth:`Registry.snapshot`
+holds — so a snapshot is a *point-in-time* view.  In particular a
+histogram can never be read torn (``count`` bumped but ``total`` not)
+while another thread is mid-``observe``, and concurrent ``inc`` calls
+never lose updates; this is what makes the registry safe under the
+serving engine's threaded dispatch.
+
+Cardinality: the helpers accept an optional ``label`` (e.g. a serving
+family fingerprint).  Labeled series materialize as
+``name{label}`` entries, and the registry caps the distinct labels per
+base name (:attr:`Registry.max_labels`, default 64) — the overflow
+collapses into ``name{_other}``, so per-request labels can never grow a
+snapshot without bound.
 
 The module-level helpers :func:`inc` / :func:`set_gauge` /
 :func:`observe` are the instrumentation entry points: they early-return
@@ -21,93 +37,133 @@ import threading
 
 from .trace import enabled
 
+#: label value unbounded-cardinality series collapse into
+OVERFLOW_LABEL = "_other"
+
 
 class Counter:
     """Monotonic accumulator (``int`` or ``float`` increments)."""
 
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
-    def __init__(self):
+    def __init__(self, lock: threading.RLock | None = None):
         self.value = 0
+        self._lock = lock if lock is not None else threading.RLock()
 
     def inc(self, v=1):
-        self.value += v
+        with self._lock:
+            self.value += v
 
 
 class Gauge:
     """Last-write-wins instantaneous value."""
 
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
-    def __init__(self):
+    def __init__(self, lock: threading.RLock | None = None):
         self.value = 0
+        self._lock = lock if lock is not None else threading.RLock()
 
     def set(self, v):
-        self.value = v
+        with self._lock:
+            self.value = v
 
 
 class Histogram:
     """Streaming summary (count/total/min/max) — enough for wall-time
-    and byte-size distributions without bucket configuration."""
+    and byte-size distributions without bucket configuration.  The four
+    fields mutate atomically (one lock around the whole ``observe``), so
+    a concurrent reader can never see them disagree."""
 
-    __slots__ = ("count", "total", "min", "max")
+    __slots__ = ("count", "total", "min", "max", "_lock")
 
-    def __init__(self):
+    def __init__(self, lock: threading.RLock | None = None):
         self.count = 0
         self.total = 0.0
         self.min = None
         self.max = None
+        self._lock = lock if lock is not None else threading.RLock()
 
     def observe(self, v):
         v = float(v)
-        self.count += 1
-        self.total += v
-        self.min = v if self.min is None else min(self.min, v)
-        self.max = v if self.max is None else max(self.max, v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            self.min = v if self.min is None else min(self.min, v)
+            self.max = v if self.max is None else max(self.max, v)
 
     def summary(self) -> dict:
-        return {
-            "count": self.count,
-            "total": self.total,
-            "min": self.min,
-            "max": self.max,
-            "mean": self.total / self.count if self.count else None,
-        }
+        with self._lock:
+            return {
+                "count": self.count,
+                "total": self.total,
+                "min": self.min,
+                "max": self.max,
+                "mean": self.total / self.count if self.count else None,
+            }
 
 
 class Registry:
-    """Thread-safe name → instrument map, one per kind."""
+    """Thread-safe name → instrument map, one per kind.
 
-    def __init__(self):
-        self._lock = threading.Lock()
+    Instruments share the registry's reentrant lock, so snapshots and
+    mutations serialize against each other (see module docstring)."""
+
+    def __init__(self, max_labels: int = 64):
+        # reentrant: snapshot() holds it while Histogram.summary() takes
+        # it again through the shared instrument lock
+        self._lock = threading.RLock()
+        self.max_labels = int(max_labels)
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
+        self._labels: dict[str, set[str]] = {}
 
-    def counter(self, name: str) -> Counter:
+    def labeled(self, name: str, label) -> str:
+        """Series name for ``name`` + ``label``, enforcing the per-base
+        cardinality cap: the first ``max_labels`` distinct labels get
+        their own series, later ones collapse into ``{_other}``."""
+        if label is None:
+            return name
+        label = str(label)
+        with self._lock:
+            seen = self._labels.setdefault(name, set())
+            if label not in seen:
+                if len(seen) >= self.max_labels:
+                    label = OVERFLOW_LABEL
+                else:
+                    seen.add(label)
+        return f"{name}{{{label}}}"
+
+    def counter(self, name: str, label=None) -> Counter:
+        name = self.labeled(name, label)
         with self._lock:
             c = self._counters.get(name)
             if c is None:
-                c = self._counters[name] = Counter()
+                c = self._counters[name] = Counter(self._lock)
             return c
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, label=None) -> Gauge:
+        name = self.labeled(name, label)
         with self._lock:
             g = self._gauges.get(name)
             if g is None:
-                g = self._gauges[name] = Gauge()
+                g = self._gauges[name] = Gauge(self._lock)
             return g
 
-    def histogram(self, name: str) -> Histogram:
+    def histogram(self, name: str, label=None) -> Histogram:
+        name = self.labeled(name, label)
         with self._lock:
             h = self._histograms.get(name)
             if h is None:
-                h = self._histograms[name] = Histogram()
+                h = self._histograms[name] = Histogram(self._lock)
             return h
 
     def snapshot(self) -> dict:
         """One plain dict of everything — JSON-serializable, suitable
-        for ``PlanReport.telemetry`` and workflow artifacts."""
+        for ``PlanReport.telemetry`` and workflow artifacts.  Taken
+        under the shared instrument lock: a consistent point-in-time
+        view even with writers mid-flight on other threads."""
         with self._lock:
             return {
                 "counters": {
@@ -127,28 +183,29 @@ class Registry:
             self._counters.clear()
             self._gauges.clear()
             self._histograms.clear()
+            self._labels.clear()
 
 
 #: the process-global registry
 REGISTRY = Registry()
 
 
-def inc(name: str, v=1) -> None:
+def inc(name: str, v=1, label=None) -> None:
     """Increment counter ``name`` — no-op while telemetry is off."""
     if enabled():
-        REGISTRY.counter(name).inc(v)
+        REGISTRY.counter(name, label=label).inc(v)
 
 
-def set_gauge(name: str, v) -> None:
+def set_gauge(name: str, v, label=None) -> None:
     """Set gauge ``name`` — no-op while telemetry is off."""
     if enabled():
-        REGISTRY.gauge(name).set(v)
+        REGISTRY.gauge(name, label=label).set(v)
 
 
-def observe(name: str, v) -> None:
+def observe(name: str, v, label=None) -> None:
     """Record one histogram observation — no-op while telemetry is off."""
     if enabled():
-        REGISTRY.histogram(name).observe(v)
+        REGISTRY.histogram(name, label=label).observe(v)
 
 
 def snapshot() -> dict:

@@ -228,6 +228,89 @@ def test_metrics_snapshot_reset_roundtrip():
     assert empty == {"counters": {}, "gauges": {}, "histograms": {}}
 
 
+def test_metrics_labeled_series_and_cardinality_cap():
+    """Per-request labels materialize as ``name{label}`` series, but the
+    registry caps distinct labels per base name — the overflow collapses
+    into ``{_other}`` so request-keyed labels cannot grow a snapshot
+    without bound."""
+    reg = metrics.Registry(max_labels=3)
+    for fam in ("fam-a", "fam-b", "fam-c"):
+        reg.counter("serve.family_requests", label=fam).inc()
+    # beyond the cap: new labels all collapse into the overflow series
+    for fam in ("fam-d", "fam-e", "fam-f", "fam-g"):
+        reg.counter("serve.family_requests", label=fam).inc()
+    # an already-admitted label keeps its own series
+    reg.counter("serve.family_requests", label="fam-a").inc()
+    snap = reg.snapshot()["counters"]
+    assert snap["serve.family_requests{fam-a}"] == 2
+    assert snap["serve.family_requests{fam-b}"] == 1
+    assert snap[f"serve.family_requests{{{metrics.OVERFLOW_LABEL}}}"] == 4
+    assert "serve.family_requests{fam-d}" not in snap
+    # the cap is per base name, not global
+    reg.counter("other.series", label="fam-z").inc()
+    assert "other.series{fam-z}" in reg.snapshot()["counters"]
+    # unlabeled helpers keep the plain name
+    assert reg.labeled("plain", None) == "plain"
+    reg.reset()
+    assert reg.snapshot() == {
+        "counters": {}, "gauges": {}, "histograms": {}
+    }
+    # reset clears the label ledger too: fam-d can be admitted now
+    reg.counter("serve.family_requests", label="fam-d").inc()
+    assert (
+        "serve.family_requests{fam-d}" in reg.snapshot()["counters"]
+    )
+
+
+def test_metrics_snapshot_consistent_under_concurrent_writers():
+    """A snapshot is a point-in-time view: with writer threads
+    mid-flight, a histogram's (count, total, min, max, mean) must never
+    be torn and counter totals must never be lost.  Every observation is
+    the constant V, so any consistent snapshot satisfies
+    ``total == count * V`` exactly — a torn read breaks the identity."""
+    reg = metrics.Registry()
+    V = 0.5  # exactly representable: count * V has no rounding slack
+    stop = threading.Event()
+    PER_THREAD, N_WRITERS = 4000, 4
+
+    def writer():
+        h = reg.histogram("w.hist")
+        c = reg.counter("w.count")
+        for _ in range(PER_THREAD):
+            h.observe(V)
+            c.inc()
+
+    writers = [
+        threading.Thread(target=writer) for _ in range(N_WRITERS)
+    ]
+    torn = []
+
+    def reader():
+        while not stop.is_set():
+            snap = reg.snapshot()
+            h = snap["histograms"].get("w.hist")
+            if h is None or h["count"] == 0:
+                continue
+            if h["total"] != h["count"] * V:
+                torn.append(h)
+            if h["mean"] != V or h["min"] != V or h["max"] != V:
+                torn.append(h)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    for t in writers + readers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not torn
+    snap = reg.snapshot()
+    total = N_WRITERS * PER_THREAD
+    assert snap["counters"]["w.count"] == total  # no lost increments
+    assert snap["histograms"]["w.hist"]["count"] == total
+
+
 def test_cache_counters_match_plan_cache_stats():
     from repro.lowering.cache import PlanCache, PlanEntry
 

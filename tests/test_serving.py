@@ -1,0 +1,274 @@
+"""Contraction-as-a-service tests: the in-process EngineServer.
+
+Covers the serving contract end-to-end against the statevector oracle
+(every amplitude a tenant gets back is exact, batched or not), plus the
+deterministic group-level behaviours that are racy to assert through the
+background dispatcher: amplitude coalescing into one open-qubit batch,
+sample-group sharing, backpressure rejection with a retry hint, failure
+propagation to every ticket of a failed group, and request validation at
+submit time (before a bad request occupies queue capacity).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.engine import (
+    AmplitudeRequest,
+    EngineServer,
+    SampleRequest,
+    ServerOverloaded,
+    Ticket,
+    circuit_fingerprint,
+)
+from repro.quantum import statevector
+from repro.quantum.circuits import random_1d_circuit
+
+CIRC = random_1d_circuit(8, 6, seed=1)
+N = CIRC.num_qubits
+TD = 10
+
+
+def _oracle(bits: str) -> complex:
+    return complex(statevector.amplitude(CIRC, bits))
+
+
+def _bits(i: int) -> str:
+    return format(i, f"0{N}b")
+
+
+def _tickets(srv: EngineServer, reqs) -> list[Ticket]:
+    """Build normalized tickets without going through the queue — lets a
+    test hand one exact group to ``_run_group`` deterministically."""
+    out = []
+    for i, r in enumerate(reqs):
+        srv._normalize(r)
+        out.append(Ticket(id=i, request=r, t_submit=time.monotonic()))
+    return out
+
+
+# ----------------------------------------------------------------------
+# end-to-end: mixed burst through submit/dispatch, oracle-exact
+# ----------------------------------------------------------------------
+def test_mixed_burst_oracle_exact():
+    bitstrings = [_bits(i) for i in (0, 1, 2, 3, 130)]
+    with EngineServer(max_batch=8, max_open=4) as srv:
+        amp_tix = [
+            srv.submit(AmplitudeRequest(CIRC, bs, target_dim=TD))
+            for bs in bitstrings
+        ]
+        smp_tix = srv.submit(
+            SampleRequest(CIRC, num_samples=256, target_dim=TD, seed=3)
+        )
+        for t in amp_tix:
+            t.result(timeout=300)
+        res = smp_tix.result(timeout=300)
+    for bs, t in zip(bitstrings, amp_tix):
+        assert t.status == "done" and t.done()
+        np.testing.assert_allclose(t.value, _oracle(bs), atol=1e-6)
+        # latency accounting is populated and consistent
+        assert t.t_done >= t.t_start >= t.t_submit > 0
+        assert t.total_s >= t.compute_s >= 0.0
+        assert t.queue_s >= 0.0
+        assert t.report is not None
+    assert res.num_samples == 256
+    assert np.isfinite(res.xeb)
+    st = srv.stats()
+    assert st["completed"] == len(amp_tix) + 1
+    assert st["failed"] == 0 and st["rejected"] == 0
+    assert st["queue_depth"] == 0
+    assert st["warm_families"] >= 1
+
+
+def test_warm_family_reuses_plan():
+    """A second burst against the same family takes the warm path (the
+    plan is cached) and stays oracle-exact."""
+    with EngineServer(max_batch=4) as srv:
+        srv.submit(
+            AmplitudeRequest(CIRC, _bits(0), target_dim=TD)
+        ).result(timeout=300)
+        assert srv.stats()["warm_families"] == 1
+        t = srv.submit(AmplitudeRequest(CIRC, _bits(5), target_dim=TD))
+        np.testing.assert_allclose(
+            t.result(timeout=300), _oracle(_bits(5)), atol=1e-6
+        )
+    st = srv.stats()
+    assert st["warm_groups"] >= 1 and st["cold_groups"] >= 1
+
+
+# ----------------------------------------------------------------------
+# group-level behaviour (deterministic: one group handed to _run_group)
+# ----------------------------------------------------------------------
+def test_amplitude_group_coalesces_to_one_batch():
+    """Bitstrings differing on <= max_open positions are served from ONE
+    open-qubit batch contraction, each tenant exact at its flat index."""
+    srv = EngineServer(max_open=3)
+    bitstrings = [_bits(0), _bits(1), _bits(4), _bits(5), _bits(5)]
+    reqs = [AmplitudeRequest(CIRC, bs, target_dim=TD) for bs in bitstrings]
+    ts = _tickets(srv, reqs)
+    srv._run_group(srv._family_key(reqs[0]), ts, warm=False)
+    for bs, t in zip(bitstrings, ts):
+        assert t.status == "done"
+        assert t.batched  # answered from the shared contraction
+        np.testing.assert_allclose(t.value, _oracle(bs), atol=1e-6)
+    st = srv.stats()
+    assert st["coalesced"] == len(ts)
+    assert st["groups"] == 1 and st["completed"] == len(ts)
+
+
+def test_amplitude_group_too_spread_falls_back_to_scalar():
+    """Bitstrings differing on more than max_open positions cannot share
+    a batch: each is served by a scalar contraction, still exact."""
+    srv = EngineServer(max_open=2)
+    bitstrings = [_bits(0), _bits(0b10101010)]  # differ on 4 positions
+    reqs = [AmplitudeRequest(CIRC, bs, target_dim=TD) for bs in bitstrings]
+    ts = _tickets(srv, reqs)
+    srv._run_group(srv._family_key(reqs[0]), ts, warm=False)
+    for bs, t in zip(bitstrings, ts):
+        assert t.status == "done" and not t.batched
+        np.testing.assert_allclose(t.value, _oracle(bs), atol=1e-6)
+    assert srv.stats()["coalesced"] == 0
+
+
+def test_duplicate_bitstrings_share_one_contraction():
+    srv = EngineServer()
+    reqs = [
+        AmplitudeRequest(CIRC, _bits(7), target_dim=TD) for _ in range(3)
+    ]
+    ts = _tickets(srv, reqs)
+    srv._run_group(srv._family_key(reqs[0]), ts, warm=False)
+    vals = {t.value for t in ts}
+    assert len(vals) == 1
+    assert all(t.batched for t in ts)
+    np.testing.assert_allclose(ts[0].value, _oracle(_bits(7)), atol=1e-6)
+
+
+def test_sample_group_shares_one_contraction():
+    """Sampling tenants on one family share the batch contraction and
+    differ only in their per-tenant draw."""
+    srv = EngineServer()
+    reqs = [
+        SampleRequest(
+            CIRC, num_samples=128, open_qubits=(5, 6, 7),
+            target_dim=TD, seed=s,
+        )
+        for s in (0, 1)
+    ]
+    ts = _tickets(srv, reqs)
+    key = srv._family_key(reqs[0])
+    assert key == srv._family_key(reqs[1])  # same family despite seeds
+    srv._run_group(key, ts, warm=False)
+    for t in ts:
+        assert t.status == "done" and t.batched
+        assert t.value.num_samples == 128
+    # different seeds -> independent draws off the shared batch
+    assert srv.stats()["coalesced"] == 2
+    # draws land on the open qubits only (base bits fixed at 0)
+    for t in ts:
+        for s in t.value.bitstrings[:8]:
+            assert s[: N - 3] == "0" * (N - 3)
+
+
+def test_family_key_separates_plans_and_structures():
+    srv = EngineServer()
+    a = AmplitudeRequest(CIRC, _bits(0), target_dim=TD)
+    b = AmplitudeRequest(CIRC, _bits(1), target_dim=TD)
+    c = AmplitudeRequest(CIRC, _bits(0), target_dim=TD + 2)
+    d = AmplitudeRequest(
+        CIRC, _bits(0), target_dim=TD, plan_kwargs={"precision": "bf16"}
+    )
+    other = random_1d_circuit(8, 6, seed=9)
+    e = AmplitudeRequest(other, _bits(0), target_dim=TD)
+    assert srv._family_key(a) == srv._family_key(b)
+    assert srv._family_key(a) != srv._family_key(c)
+    assert srv._family_key(a) != srv._family_key(d)
+    assert srv._family_key(a) != srv._family_key(e)
+    assert circuit_fingerprint(CIRC) != circuit_fingerprint(other)
+
+
+# ----------------------------------------------------------------------
+# backpressure + failure + validation
+# ----------------------------------------------------------------------
+def test_backpressure_rejects_with_retry_hint(monkeypatch):
+    with EngineServer(max_queue=2, max_batch=1) as srv:
+        # warm the family so groups run inline on the dispatch thread
+        srv.submit(
+            AmplitudeRequest(CIRC, _bits(0), target_dim=TD)
+        ).result(timeout=300)
+        gate, started = threading.Event(), threading.Event()
+        orig = srv._run_group
+
+        def blocked(key, tickets, warm):
+            started.set()
+            gate.wait(timeout=60)
+            orig(key, tickets, warm)
+
+        monkeypatch.setattr(srv, "_run_group", blocked)
+        held = srv.submit(AmplitudeRequest(CIRC, _bits(1), target_dim=TD))
+        assert started.wait(timeout=60)  # dispatcher is now blocked
+        queued = [
+            srv.submit(AmplitudeRequest(CIRC, _bits(i), target_dim=TD))
+            for i in (2, 3)
+        ]
+        with pytest.raises(ServerOverloaded) as exc:
+            srv.submit(AmplitudeRequest(CIRC, _bits(4), target_dim=TD))
+        assert exc.value.retry_after_s > 0
+        assert exc.value.depth == 2
+        gate.set()
+        for t in [held, *queued]:
+            t.result(timeout=300)
+    assert srv.stats()["rejected"] == 1
+
+
+def test_group_failure_propagates_to_every_ticket():
+    srv = EngineServer()
+    reqs = [
+        AmplitudeRequest(
+            CIRC, _bits(i), target_dim=TD,
+            plan_kwargs={"backend": "no-such-backend"},
+        )
+        for i in (0, 1)
+    ]
+    ts = _tickets(srv, reqs)
+    srv._run_group(srv._family_key(reqs[0]), ts, warm=False)
+    for t in ts:
+        assert t.status == "failed" and t.done()
+        with pytest.raises(Exception):
+            t.result(timeout=1)
+    assert srv.stats()["failed"] == 2
+
+
+def test_stop_drains_accepted_tickets():
+    srv = EngineServer(max_batch=4)
+    srv.start()
+    ts = [
+        srv.submit(AmplitudeRequest(CIRC, _bits(i), target_dim=TD))
+        for i in (0, 1, 2)
+    ]
+    srv.stop()  # must serve (or fail) everything accepted before return
+    for t in ts:
+        assert t.done()
+        t.result(timeout=1)
+    with pytest.raises(RuntimeError):
+        srv.submit(AmplitudeRequest(CIRC, _bits(0), target_dim=TD))
+
+
+def test_submit_validates_before_enqueue():
+    with EngineServer() as srv:
+        with pytest.raises(ValueError):
+            srv.submit(AmplitudeRequest(CIRC, "01"))  # wrong length
+        with pytest.raises(ValueError):
+            srv.submit(AmplitudeRequest(CIRC, "2" * N))  # bad alphabet
+        with pytest.raises(ValueError):
+            srv.submit(SampleRequest(CIRC, num_samples=0))
+        with pytest.raises(ValueError):
+            srv.submit(SampleRequest(CIRC, sampler="bogus"))
+        with pytest.raises(ValueError):
+            srv.submit(SampleRequest(CIRC, base_bitstring="1"))
+        with pytest.raises(TypeError):
+            srv.submit("not a request")
+        assert srv.stats()["submitted"] == 0
